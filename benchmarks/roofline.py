@@ -1,0 +1,128 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e model).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step:
+
+  compute    = per-device HLO FLOPs / peak (197 TFLOP/s bf16)
+  memory     = per-device HBM-traffic bytes / HBM bw (819 GB/s)
+  collective = Σ per-op ring-model bytes / ICI bw (~50 GB/s per chip)
+
+FLOPs/bytes/collectives come from ``benchmarks.hlo_analysis`` — a call-graph
+walker over the partitioned HLO that multiplies while-loop (scan) bodies by
+their trip counts.  XLA's own ``cost_analysis()`` visits loop bodies once and
+undercounts scanned models by the layer count (verified; see hlo_analysis
+docstring + tests).  Both numbers are recorded: ``xla_cost_analysis`` for
+reference, the corrected numbers for the roofline.
+
+Ring-model collective costs over replica-group size N:
+  all-reduce        2·(N-1)/N · result_bytes
+  all-gather          (N-1)/N · result_bytes
+  reduce-scatter      (N-1)   · result_bytes      (input = N · result)
+  all-to-all          (N-1)/N · result_bytes
+  collective-permute            result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Dict, Optional
+
+from . import hlo_analysis
+
+# ----------------------------------------------------------- hardware model
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per chip (~1 link)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    coll_counts: Dict[str, int]
+    model_flops_global: float          # 6·N·D (train) / 2·N·tokens (serve)
+    n_chips: int
+    xla_flops: float = 0.0             # raw cost_analysis, for reference
+    xla_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — remat/redundancy waste."""
+        hlo_global = self.flops_per_device * self.n_chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOP/s achieved over the cluster peak, if the step
+        runs at max(term) seconds (an MFU bound derived from the dry-run)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops_global / (self.n_chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes,
+            "coll_counts": dict(self.coll_counts),
+            "model_flops_global": self.model_flops_global,
+            "n_chips": self.n_chips,
+            "xla_flops": self.xla_flops,
+            "xla_bytes": self.xla_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens for training, 2·N_active·tokens for
+    inference (decode counts the new tokens only)."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n_active * seq * batch
+    if shape_kind == "prefill":
+        return 2.0 * n_active * seq * batch
+    return 2.0 * n_active * batch          # decode: one token per sequence
+
+
+def analyze(compiled, cfg, shape_kind: str, seq: int, batch: int,
+            n_chips: int) -> Roofline:
+    hlo = compiled.as_text()
+    costs = hlo_analysis.analyze_text(hlo)
+    ca = compiled.cost_analysis() or {}
+    counts = Counter()
+    for c in costs.collectives:
+        counts[c["kind"]] += c.get("mult", 1)
+    return Roofline(
+        flops_per_device=float(costs.flops),
+        bytes_per_device=float(costs.bytes),
+        collective_bytes=hlo_analysis.collective_cost_bytes(costs.collectives),
+        coll_counts=dict(counts),
+        model_flops_global=model_flops(cfg, shape_kind, seq, batch),
+        n_chips=n_chips,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+    )

@@ -1,0 +1,43 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
+writes JSON payloads under benchmarks/results/.  The dry-run/roofline sweep
+(launch/dryrun.py) is separate — it needs the 512-device platform flag.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_chunksize, bench_fig8_span, bench_fig9_beta,
+                   bench_fig10_compression, bench_fig11_query,
+                   bench_fig12_scaling, bench_fig13_online, bench_table1)
+
+    suites = [
+        ("table1_costmodel", bench_table1.run),
+        ("sec2.3_chunksize", bench_chunksize.run),
+        ("fig8_span", bench_fig8_span.run),
+        ("fig9_beta", bench_fig9_beta.run),
+        ("fig10_compression", bench_fig10_compression.run),
+        ("fig11_query", bench_fig11_query.run),
+        ("fig12_scaling", bench_fig12_scaling.run),
+        ("fig13_online", bench_fig13_online.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"suite/{name},{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"suite/{name},0,FAILED:{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: RStore as a versioned document store (the paper's API).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import RStore, RStoreConfig
+
+rng = np.random.default_rng(0)
+
+
+def doc(payload: str) -> bytes:
+    """Records are opaque bytes — JSON documents here."""
+    return ('{"record": "%s", "blob": "%s"}'
+            % (payload, "x" * 64)).encode()
+
+
+def main():
+    rs = RStore(RStoreConfig(algorithm="bottom_up",   # the paper's best
+                             capacity=4096,           # chunk size C
+                             k=3,                     # sub-chunk compression
+                             batch_size=4))           # online batching (§4)
+
+    # -- commit a root collection and a few derived versions ---------------
+    v0 = rs.init_root({pk: doc(f"patient-{pk}/baseline") for pk in range(50)})
+    v1 = rs.commit([v0], adds={7: doc("patient-7/updated-labs")})
+    v2 = rs.commit([v0], adds={50: doc("patient-50/new-enrollee")}, dels=[3])
+    v3 = rs.commit([v1, v2], adds={8: doc("patient-8/merged-analysis")})
+
+    # -- Q1: full version retrieval ----------------------------------------
+    records, stats = rs.get_version(v3)
+    print(f"version {v3}: {len(records)} records via "
+          f"{stats.chunks_fetched} chunks, {stats.kvs_queries} KVS queries")
+
+    # -- Q-point / Q2: record + range retrieval ----------------------------
+    rec, _ = rs.get_record(v3, 7)
+    print("patient 7 at v3:", rec[:40], "...")
+    rng_recs, _ = rs.get_range(v3, 10, 19)
+    print("range [10, 19]:", sorted(rng_recs))
+
+    # -- Q3: record evolution ----------------------------------------------
+    evo, _ = rs.get_evolution(7)
+    print("evolution of patient 7:", [(v, p[:28]) for v, p in evo])
+
+    # -- storage ------------------------------------------------------------
+    print("storage:", rs.storage_stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Batched serving demo: prefill + jitted greedy decode over a reduced arch,
+with a versioned model registry (serve the model at any RStore version).
+
+Run:  PYTHONPATH=src python examples/serve_demo.py [--arch granite-moe-1b-a400m]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data.pipeline import synthetic_batch
+from repro.models.model import build_model
+from repro.serve.engine import Engine
+from repro.train.checkpoint import VersionedCheckpointer
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m",
+                    choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()
+    cfg = cfg.__class__(**{**cfg.__dict__, "remat": "none"})
+    model = build_model(cfg)
+    opt = make_optimizer(cfg)
+
+    # "train" two quick model versions and register them
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    ckpt = VersionedCheckpointer()
+    v0 = ckpt.commit(state, parents=(), tag="init")
+    for i in range(5):
+        state, _ = step(state, synthetic_batch(cfg, i, 4, 64))
+    v1 = ckpt.commit(state, parents=(v0,), tag="tuned")
+
+    prompts = {"tokens": synthetic_batch(cfg, 0, args.batch,
+                                         args.prompt_len)["tokens"]}
+    for version in (v0, v1):
+        params = ckpt.restore(version, like=state)["params"]
+        eng = Engine(cfg, params, max_len=args.prompt_len + args.gen + 8)
+        t0 = time.time()
+        toks = eng.generate(prompts, steps=args.gen)
+        dt = time.time() - t0
+        tps = args.batch * args.gen / dt
+        print(f"model@v{version}: generated {toks.shape} in {dt:.2f}s "
+              f"({tps:.1f} tok/s) — first row: {np.asarray(toks[0])[:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""De-risk: can we lower+compile a scanned transformer train step on a 512-device
+host-platform mesh within acceptable time/memory on 1 CPU core?"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import time
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+t0 = time.time()
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print(f"mesh built in {time.time()-t0:.1f}s, ndev={len(jax.devices())}")
+
+L, D, F, V = 16, 1024, 4096, 32000
+B, S = 32, 1024
+
+
+def init_shapes():
+    return {
+        "emb": jax.ShapeDtypeStruct((V, D), jnp.bfloat16),
+        "wq": jax.ShapeDtypeStruct((L, D, D), jnp.bfloat16),
+        "wo": jax.ShapeDtypeStruct((L, D, D), jnp.bfloat16),
+        "w1": jax.ShapeDtypeStruct((L, D, F), jnp.bfloat16),
+        "w2": jax.ShapeDtypeStruct((L, F, D), jnp.bfloat16),
+    }
+
+
+def fwd(params, tokens):
+    x = params["emb"][tokens]
+
+    def layer(x, p):
+        wq, wo, w1, w2 = p
+        h = jnp.einsum("bsd,de->bse", x, wq)
+        a = jax.nn.softmax(jnp.einsum("bsd,btd->bst", h, h) / 32.0, axis=-1)
+        x = x + jnp.einsum("bst,btd->bsd", a, x) @ wo
+        x = x + jax.nn.relu(x @ w1) @ w2
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, (params["wq"], params["wo"], params["w1"], params["w2"]))
+    return jnp.einsum("bsd,vd->bsv", x, params["emb"])
+
+
+def loss_fn(params, batch):
+    logits = fwd(params, batch["tokens"])
+    onehot = jax.nn.one_hot(batch["labels"], V, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits, axis=-1) * onehot, axis=-1))
+
+
+def train_step(params, batch):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    params = jax.tree.map(lambda p, g: (p.astype(jnp.float32) - 1e-3 * g).astype(p.dtype), params, grads)
+    return params, loss
+
+
+pspecs = {
+    "emb": P("model", ("pod", "data")),
+    "wq": P(None, ("pod", "data"), "model"),
+    "wo": P(None, "model", ("pod", "data")),
+    "w1": P(None, ("pod", "data"), "model"),
+    "w2": P(None, "model", ("pod", "data")),
+}
+param_sh = jax.tree.map(lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+                        init_shapes(), pspecs)
+batch_sh = {
+    "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=NamedSharding(mesh, P(("pod", "data"), None))),
+    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=NamedSharding(mesh, P(("pod", "data"), None))),
+}
+
+t0 = time.time()
+lowered = jax.jit(train_step, donate_argnums=(0,)).lower(param_sh, batch_sh)
+print(f"lowered in {time.time()-t0:.1f}s")
+t0 = time.time()
+compiled = lowered.compile()
+print(f"compiled in {time.time()-t0:.1f}s")
+ma = compiled.memory_analysis()
+print("argument bytes/dev:", ma.argument_size_in_bytes)
+print("temp bytes/dev:", ma.temp_size_in_bytes)
+ca = compiled.cost_analysis()
+print("flops:", ca.get("flops"), "bytes accessed:", ca.get("bytes accessed"))
+txt = compiled.as_text()
+import re
+colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", txt)
+from collections import Counter
+print("collectives:", Counter(colls))

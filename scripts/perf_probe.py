@@ -1,0 +1,80 @@
+"""§Perf profiler: compile one cell and print top FLOP/byte/collective
+contributors by jax op_name (dry-run profile — no wall clock on CPU).
+
+  PYTHONPATH=src:. python scripts/perf_probe.py kimi-k2-1t-a32b train_4k [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import argparse
+
+from benchmarks import hlo_analysis as H
+from benchmarks import roofline as R
+from repro.configs import ARCHS, SHAPES
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import mesh_env
+
+
+def shorten(name: str, width: int = 110) -> str:
+    name = name.replace("jit(train_step)/", "").replace("jit(", "").replace(")", "")
+    return name[-width:]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.set:
+        import dataclasses
+        over = {}
+        for kv in args.set:
+            k, v = kv.split("=", 1)
+            cur = getattr(cfg, k)
+            over[k] = type(cur)(v) if not isinstance(cur, bool) \
+                else v.lower() in ("1", "true", "yes")
+        cfg = dataclasses.replace(cfg, **over)
+        print("overrides:", over)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    from repro.sharding.rules import rules_for
+    with mesh_env(mesh, rules=rules_for(cfg, mesh)) as env:
+        fn, specs = build_cell(cfg, shape, env)
+        compiled = fn.lower(*specs).compile()
+    hlo = compiled.as_text()
+    roof = R.analyze(compiled, cfg, shape.kind, shape.seq_len,
+                     shape.global_batch, mesh.devices.size)
+    ma = compiled.memory_analysis()
+    hbm = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+           + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    print(f"== {args.arch} × {args.shape} "
+          f"{'2x16x16' if args.multi_pod else '16x16'} ==")
+    print(f"t_comp={roof.t_compute:.3f}s t_mem={roof.t_memory:.3f}s "
+          f"t_coll={roof.t_collective:.3f}s bound={roof.bottleneck} "
+          f"hbm/dev={hbm/2**30:.1f}GiB useful={roof.useful_flops_fraction:.3f} "
+          f"roofline={roof.roofline_fraction:.4f}")
+    print("\n-- top FLOPs --")
+    for name, fl in H.flops_breakdown(hlo, args.top):
+        print(f"{fl:.3e}  {shorten(name)}")
+    print("\n-- top HBM bytes --")
+    for name, b in H.bytes_breakdown(hlo, args.top):
+        print(f"{b/2**30:9.2f}G  {shorten(name)}")
+    print("\n-- top collective bytes (ring-model) --")
+    for name, b in H.collective_breakdown(hlo, args.top):
+        print(f"{b/2**30:9.2f}G  {shorten(name)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""RStore core: the paper's contribution — a multi-version document store
+layered over a distributed key-value store."""
+from .datagen import PAPER_DATASETS, DatasetSpec, dataset_stats, generate
+from .ingest import RStore, RStoreConfig
+from .types import Chunk, CompositeKey, Delta, Partitioning, Record
+from .version_graph import DeltaIds, RecordStore, VersionGraph
+
+__all__ = [
+    "RStore", "RStoreConfig", "VersionGraph", "RecordStore", "DeltaIds",
+    "CompositeKey", "Record", "Delta", "Chunk", "Partitioning",
+    "DatasetSpec", "PAPER_DATASETS", "generate", "dataset_stats",
+]

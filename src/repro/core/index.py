@@ -1,0 +1,154 @@
+"""Lossy projections + posting-list compression (§2.4, Fig. 3b).
+
+Two in-memory maps answer "which chunks might hold what I need":
+  - version→chunks (drives Q1 full version retrieval),
+  - key→chunks     (drives Q3 record evolution).
+Record/range retrieval ANDs the two (index-ANDing) — realized with the
+``bitmap`` Pallas kernel over chunk-membership bitmaps.  Both lists are
+*lossy*: a fetched chunk may turn out to hold no relevant record (the paper
+notes this explicitly); the exact information lives in the per-chunk maps.
+
+Posting lists are stored delta+varint compressed (the paper's pointer to the
+inverted-index literature) with ``compressed_size`` exposed so benchmarks can
+reproduce the §2.4 index-size discussion.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from ..kernels import ops as kops
+from .types import Partitioning
+from .version_graph import VersionGraph
+
+
+# ------------------------------------------------------------------- varints
+def varint_encode(arr: np.ndarray) -> bytes:
+    """Delta + LEB128 varint encoding of a sorted non-negative int array."""
+    out = bytearray()
+    prev = 0
+    for x in arr.tolist():
+        d = x - prev
+        prev = x
+        while True:
+            b = d & 0x7F
+            d >>= 7
+            if d:
+                out.append(b | 0x80)
+            else:
+                out.append(b)
+                break
+    return bytes(out)
+
+
+def varint_decode(buf: bytes) -> np.ndarray:
+    out: List[int] = []
+    acc = 0
+    shift = 0
+    prev = 0
+    for byte in buf:
+        acc |= (byte & 0x7F) << shift
+        if byte & 0x80:
+            shift += 7
+        else:
+            prev += acc
+            out.append(prev)
+            acc = 0
+            shift = 0
+    return np.asarray(out, dtype=np.int64)
+
+
+# --------------------------------------------------------------- projections
+@dataclass
+class Projections:
+    version_chunks: Dict[int, np.ndarray]   # vid -> sorted chunk ids
+    key_chunks: Dict[int, np.ndarray]       # pk  -> sorted chunk ids
+    n_chunks: int
+
+    # -------------------------------------------------------------- building
+    @staticmethod
+    def build(graph: VersionGraph, part: Partitioning) -> "Projections":
+        r2c = part.record_to_chunk
+        vc = {v: np.unique(r2c[m]) for v, m in graph.memberships().items()}
+        keys = graph.store.keys()
+        kc: Dict[int, np.ndarray] = {}
+        order = np.argsort(keys, kind="stable")
+        ks = keys[order]
+        cs = r2c[order]
+        bounds = np.flatnonzero(np.r_[True, ks[1:] != ks[:-1], True])
+        for i in range(len(bounds) - 1):
+            lo, hi = bounds[i], bounds[i + 1]
+            kc[int(ks[lo])] = np.unique(cs[lo:hi])
+        return Projections(version_chunks=vc, key_chunks=kc,
+                           n_chunks=part.num_chunks)
+
+    @staticmethod
+    def build_from_r2c(graph: VersionGraph, r2c: np.ndarray,
+                       n_chunks: int) -> "Projections":
+        class _P:  # minimal Partitioning stand-in
+            record_to_chunk = r2c
+            num_chunks = n_chunks
+        return Projections.build(graph, _P())  # type: ignore[arg-type]
+
+    # -------------------------------------------------------------- lookups
+    def chunks_for_version(self, vid: int) -> np.ndarray:
+        return self.version_chunks[vid]
+
+    def chunks_for_key(self, pk: int) -> np.ndarray:
+        return self.key_chunks.get(pk, np.empty(0, np.int64))
+
+    # ------------------------------------------------------- index-ANDing
+    def _bitmap_of(self, chunk_ids: np.ndarray) -> np.ndarray:
+        W = (self.n_chunks + 31) // 32
+        bm = np.zeros(W, dtype=np.uint32)
+        np.bitwise_or.at(bm, chunk_ids // 32,
+                         np.uint32(1) << (chunk_ids % 32).astype(np.uint32))
+        return bm
+
+    def candidates(self, vid: int, pks: Iterable[int]) -> np.ndarray:
+        """Chunks possibly holding records of any of ``pks`` within version
+        ``vid``: AND of the key bitmaps (batched kernel) with the version
+        bitmap, OR'd across keys."""
+        pks = list(pks)
+        if not pks:
+            return np.empty(0, np.int64)
+        vrow = self._bitmap_of(self.version_chunks[vid])
+        kb = np.stack([self._bitmap_of(self.chunks_for_key(pk)) for pk in pks])
+        anded, counts = kops.and_popcount_batch(kb, vrow)
+        merged = np.bitwise_or.reduce(anded, axis=0)
+        return _bitmap_to_ids(merged, self.n_chunks)
+
+    def candidates_range(self, vid: int, key_lo: int, key_hi: int) -> np.ndarray:
+        pks = [pk for pk in self.key_chunks if key_lo <= pk <= key_hi]
+        return self.candidates(vid, pks)
+
+    # ----------------------------------------------------------- index size
+    def compressed_size(self) -> Dict[str, int]:
+        v = sum(len(varint_encode(c)) for c in self.version_chunks.values())
+        k = sum(len(varint_encode(c)) for c in self.key_chunks.values())
+        return {"version_chunks_bytes": v, "key_chunks_bytes": k}
+
+    def raw_size(self) -> Dict[str, int]:
+        v = sum(8 * len(c) for c in self.version_chunks.values())
+        k = sum(8 * len(c) for c in self.key_chunks.values())
+        return {"version_chunks_bytes": v, "key_chunks_bytes": k}
+
+    # ------------------------------------------------------ online updates
+    def extend_version(self, vid: int, chunk_ids: np.ndarray) -> None:
+        self.version_chunks[vid] = np.unique(chunk_ids)
+
+    def extend_keys(self, pk_to_chunks: Dict[int, np.ndarray]) -> None:
+        for pk, cs in pk_to_chunks.items():
+            old = self.key_chunks.get(pk)
+            self.key_chunks[pk] = np.unique(cs) if old is None else \
+                np.union1d(old, cs)
+
+    def grow(self, n_chunks: int) -> None:
+        self.n_chunks = max(self.n_chunks, n_chunks)
+
+
+def _bitmap_to_ids(bm: np.ndarray, n: int) -> np.ndarray:
+    bits = np.unpackbits(bm.view(np.uint8), bitorder="little")[:n]
+    return np.flatnonzero(bits).astype(np.int64)

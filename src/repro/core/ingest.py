@@ -1,0 +1,273 @@
+"""RStore facade: ingest (commit), build, flush, and queries (§2.4).
+
+The user-facing API mirrors the paper's application server:
+
+    rs = RStore(RStoreConfig(algorithm="bottom_up", capacity=1<<20, k=3))
+    v0 = rs.init_root({pk: payload, ...})
+    v1 = rs.commit([v0], adds={pk: new_payload}, dels=[pk2])   # delta ingest
+    records, stats = rs.get_version(v1)
+
+Commits only carry the delta ("the system requests only those records from
+the client that have changed").  Deltas accumulate in the delta store and are
+chunked in batches (§4); reads flush pending work first.  ``build()`` runs
+the full offline pipeline (sub-chunking when k>1 → partitioning → chunk/map
+writes → projections).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .chunkstore import build_chunk
+from .index import Projections
+from .kvs import KVS, InMemoryKVS
+from .online import partition_batch
+from .partition import ALGORITHMS, DeltaBaseline
+from .query import QueryProcessor
+from .subchunk import (build_subchunks, build_transformed,
+                       compressed_subchunk_sizes)
+from .types import Chunk, Partitioning, pack_ck
+from .version_graph import VersionGraph
+
+
+@dataclass
+class RStoreConfig:
+    algorithm: str = "bottom_up"
+    capacity: int = 1 << 16          # chunk size C in bytes
+    k: int = 1                       # max records per sub-chunk (§3.4)
+    batch_size: int = 64             # online batch (§4)
+    beta: int = 64                   # BOTTOM-UP subtree bound (§3.2.1)
+    shingle_hashes: int = 8
+    store_payloads: bool = True
+
+    def algo_kwargs(self) -> dict:
+        if self.algorithm == "bottom_up":
+            return {"beta": self.beta}
+        if self.algorithm == "shingle":
+            return {"n_hashes": self.shingle_hashes}
+        return {}
+
+
+class RStore:
+    def __init__(self, config: Optional[RStoreConfig] = None,
+                 kvs: Optional[KVS] = None) -> None:
+        self.config = config or RStoreConfig()
+        self.kvs: KVS = kvs if kvs is not None else InMemoryKVS()
+        self.graph = VersionGraph()
+        self._next_vid = 0
+        self.pending: List[int] = []          # delta store (§4): unchunked vids
+        self.r2c = np.empty(0, dtype=np.int64)  # record -> chunk (global)
+        self.n_chunks = 0
+        self.proj: Optional[Projections] = None
+        self._subchunk_groups: Optional[List[np.ndarray]] = None
+        self._flushed_versions = 0
+        # chunk id -> record ids in *stored order* (chunk maps must preserve
+        # the chunk's local record indexing when rebuilt)
+        self._chunk_records: Dict[int, np.ndarray] = {}
+
+    # ------------------------------------------------------------- ingest
+    def _key_map(self, vid: int) -> Dict[int, int]:
+        rids = self.graph.members(vid)
+        keys = self.graph.store.keys()[rids]
+        return dict(zip(keys.tolist(), rids.tolist()))
+
+    def init_root(self, records: Dict[int, bytes]) -> int:
+        vid = self._next_vid
+        self._next_vid += 1
+        cks = np.array([pack_ck(pk, vid) for pk in records], dtype=np.int64)
+        sizes = np.array([len(p) for p in records.values()], dtype=np.int64)
+        payloads = list(records.values()) if self.config.store_payloads else None
+        rids = self.graph.store.add_batch(cks, sizes, payloads)
+        self.graph.add_root(vid, rids)
+        self._grow_r2c()
+        self.pending.append(vid)
+        self._maybe_flush()
+        return vid
+
+    def commit(self, parents: Sequence[int], adds: Dict[int, bytes],
+               dels: Iterable[int] = ()) -> int:
+        """Commit a new version as a delta from ``parents[0]`` (extra parents
+        form a merge; their exclusive keys are pulled in per Fig. 4)."""
+        vid = self._next_vid
+        self._next_vid += 1
+        pmap = self._key_map(parents[0])
+        store = self.graph.store
+
+        del_rids: List[int] = []
+        dels = set(dels)
+        for pk in dels:
+            if pk not in pmap:
+                raise KeyError(f"delete of absent key {pk}")
+            del_rids.append(pmap[pk])
+
+        add_rids: List[int] = []
+        for pk, payload in adds.items():
+            if pk in dels:
+                raise ValueError(f"key {pk} both added and deleted")
+            ck = pack_ck(pk, vid)
+            rid = store.add(ck, len(payload),
+                            payload if self.config.store_payloads else None)
+            add_rids.append(rid)
+            if pk in pmap:
+                del_rids.append(pmap[pk])     # superseded record
+
+        # merge parents: pull exclusive keys (Fig. 4 tree conversion)
+        for other in parents[1:]:
+            omap = self._key_map(other)
+            for pk, rid in omap.items():
+                if pk not in pmap and pk not in adds and pk not in dels:
+                    add_rids.append(rid)
+
+        self.graph.add_version(vid, list(parents), np.asarray(add_rids),
+                               np.asarray(del_rids))
+        self._grow_r2c()
+        self.pending.append(vid)
+        self._maybe_flush()
+        return vid
+
+    def _grow_r2c(self) -> None:
+        n = len(self.graph.store)
+        if n > len(self.r2c):
+            grown = np.full(n, -1, dtype=np.int64)
+            grown[:len(self.r2c)] = self.r2c
+            self.r2c = grown
+
+    # ------------------------------------------------------------ chunking
+    def _maybe_flush(self) -> None:
+        if len(self.pending) >= self.config.batch_size:
+            self.flush()
+
+    def flush(self) -> None:
+        """Chunk the pending batch (§4 online path; k=1 only — the paper's
+        online algorithm does not cover re-grouping sub-chunks)."""
+        if not self.pending:
+            return
+        if self.config.k > 1:
+            # compression mode: fall back to a full rebuild (documented)
+            self.build()
+            return
+        batch = self.pending
+        self.pending = []
+        placed = self.r2c >= 0
+        part = partition_batch(self.graph, batch, placed,
+                               self.config.algorithm, self.config.capacity,
+                               chunk_id_base=self.n_chunks,
+                               **self.config.algo_kwargs())
+        mask = part.record_to_chunk >= 0
+        self.r2c[:len(mask)][mask] = part.record_to_chunk[mask]
+        self.n_chunks += part.num_chunks
+
+        # projections: new versions + affected old chunks
+        if self.proj is None:
+            self.proj = Projections(version_chunks={}, key_chunks={},
+                                    n_chunks=self.n_chunks)
+        self.proj.grow(self.n_chunks)
+        keys = self.graph.store.keys()
+        affected_old: set = set()
+        for v in batch:
+            vchunks = np.unique(self.r2c[self.graph.members(v)])
+            assert (vchunks >= 0).all(), "unplaced record in flushed version"
+            self.proj.extend_version(v, vchunks)
+            old = vchunks[vchunks < self.n_chunks - part.num_chunks]
+            affected_old.update(int(c) for c in old)
+        kc: Dict[int, np.ndarray] = {}
+        for c in part.chunks:
+            for r in c.record_ids:
+                kc.setdefault(int(keys[r]), []).append(c.chunk_id)  # type: ignore
+        self.proj.extend_keys({pk: np.asarray(cs) for pk, cs in kc.items()})
+
+        # write new chunks + rebuild affected old chunk maps (once per batch)
+        csr = self.graph.record_version_index_csr()
+        nv = self.graph.num_versions
+        vidx_of = {v: i for i, v in enumerate(self.graph.versions)}
+        for c in part.chunks:
+            chunk, cmap = build_chunk(self.graph, c.record_ids, c.chunk_id,
+                                      vidx_of, nv, csr)
+            self._chunk_records[c.chunk_id] = c.record_ids
+            self.kvs.put(f"chunk/{c.chunk_id}", chunk.to_bytes())
+            self.kvs.put(f"map/{c.chunk_id}", cmap.to_bytes())
+        for cid in affected_old:
+            _, cmap = build_chunk(self.graph, self._chunk_records[cid], cid,
+                                  vidx_of, nv, csr)
+            self.kvs.put(f"map/{cid}", cmap.to_bytes())
+        self._flushed_versions = self.graph.num_versions
+
+    def build(self) -> Partitioning:
+        """Full offline build (also the k>1 path)."""
+        self.pending = []
+        cfg = self.config
+        graph = self.graph
+        if cfg.k > 1:
+            groups = build_subchunks(graph, cfg.k)
+            sub_sizes = (compressed_subchunk_sizes(graph, groups)
+                         if graph.store.has_payloads() else None)
+            tds = build_transformed(graph, groups, sub_sizes)
+            algo = ALGORITHMS[cfg.algorithm](**cfg.algo_kwargs())
+            tpart = algo.partition(tds.tgraph, cfg.capacity)
+            self._subchunk_groups = groups
+            # compose record -> chunk
+            self.r2c = tpart.record_to_chunk[tds.rec_to_sub]
+            chunks = []
+            for c in tpart.chunks:
+                rec_ids = np.concatenate([groups[s] for s in c.record_ids])
+                chunks.append(Chunk(c.chunk_id, np.sort(rec_ids), c.nbytes))
+            part = Partitioning(chunks=chunks, record_to_chunk=self.r2c,
+                                algorithm=f"{cfg.algorithm}_k{cfg.k}")
+            sub_groups_of = {c.chunk_id: [groups[s] for s in tc.record_ids]
+                             for c, tc in zip(chunks, tpart.chunks)}
+        else:
+            algo = ALGORITHMS[cfg.algorithm](**cfg.algo_kwargs())
+            part = algo.partition(graph, cfg.capacity)
+            self.r2c = part.record_to_chunk.copy()
+            sub_groups_of = {}
+
+        self.n_chunks = part.num_chunks
+        self.proj = Projections.build_from_r2c(graph, self.r2c, self.n_chunks)
+
+        csr = graph.record_version_index_csr()
+        nv = graph.num_versions
+        vidx_of = {v: i for i, v in enumerate(graph.versions)}
+        self._chunk_records = {}
+        for c in part.chunks:
+            chunk, cmap = build_chunk(graph, c.record_ids, c.chunk_id, vidx_of,
+                                      nv, csr,
+                                      subchunk_groups=sub_groups_of.get(c.chunk_id))
+            self._chunk_records[c.chunk_id] = c.record_ids
+            self.kvs.put(f"chunk/{c.chunk_id}", chunk.to_bytes())
+            self.kvs.put(f"map/{c.chunk_id}", cmap.to_bytes())
+        self._flushed_versions = graph.num_versions
+        return part
+
+    # ------------------------------------------------------------- queries
+    def _qp(self) -> QueryProcessor:
+        if self.pending:
+            self.flush()
+        assert self.proj is not None, "no data ingested"
+        return QueryProcessor(self.graph, self.proj, self.kvs)
+
+    def get_version(self, vid: int):
+        return self._qp().get_version(vid)
+
+    def get_record(self, vid: int, pk: int):
+        return self._qp().get_record(vid, pk)
+
+    def get_range(self, vid: int, key_lo: int, key_hi: int):
+        return self._qp().get_range(vid, key_lo, key_hi)
+
+    def get_evolution(self, pk: int):
+        return self._qp().get_evolution(pk)
+
+    # ------------------------------------------------------------- metrics
+    def storage_stats(self) -> Dict[str, int]:
+        stored = sum(len(self.kvs.get(f"chunk/{c}")) for c in range(self.n_chunks))
+        self.kvs.stats.reset()
+        out = {
+            "n_chunks": self.n_chunks,
+            "stored_chunk_bytes": stored,
+            "raw_unique_bytes": int(self.graph.store.sizes.sum()),
+        }
+        if self.proj is not None:
+            out.update(self.proj.compressed_size())
+        return out

@@ -1,0 +1,173 @@
+"""Backend key-value store abstraction (§2.4).
+
+RStore assumes only get/put/multiget from the backend.  Two implementations:
+
+- :class:`InMemoryKVS` — host dict with request/byte counters and a simple
+  latency model (per-query overhead + bandwidth), used to reproduce the §2.3
+  "too many queries" experiment without a Cassandra cluster.
+
+- :class:`ShardedDeviceKVS` — the TPU-native realization: a fixed-slot
+  ``uint32[n_slots, slot_words]`` table sharded across the JAX mesh's
+  devices; ``multiget`` is ONE jitted batched gather (the chunking insight:
+  few large fetches beat many small ones — the gather's collective traffic
+  scales with span, which the roofline section measures).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class KVSStats:
+    n_queries: int = 0          # round-trips to the backend
+    n_values: int = 0           # values fetched
+    bytes_fetched: int = 0
+    bytes_stored: int = 0
+
+    def simulated_seconds(self, per_query_s: float = 5e-4,
+                          bandwidth_Bps: float = 200e6) -> float:
+        """Cassandra-like cost model: fixed per-request overhead + transfer."""
+        return self.n_queries * per_query_s + self.bytes_fetched / bandwidth_Bps
+
+    def reset(self) -> None:
+        self.n_queries = self.n_values = 0
+        self.bytes_fetched = self.bytes_stored = 0
+
+
+class KVS(Protocol):
+    stats: KVSStats
+
+    def put(self, key: str, value: bytes) -> None: ...
+    def get(self, key: str) -> bytes: ...
+    def multiget(self, keys: Sequence[str]) -> List[bytes]: ...
+    def __contains__(self, key: str) -> bool: ...
+
+
+class InMemoryKVS:
+    def __init__(self) -> None:
+        self._d: Dict[str, bytes] = {}
+        self.stats = KVSStats()
+
+    def put(self, key: str, value: bytes) -> None:
+        self._d[key] = value
+        self.stats.bytes_stored += len(value)
+
+    def get(self, key: str) -> bytes:
+        v = self._d[key]
+        self.stats.n_queries += 1
+        self.stats.n_values += 1
+        self.stats.bytes_fetched += len(v)
+        return v
+
+    def multiget(self, keys: Sequence[str]) -> List[bytes]:
+        """One batched round-trip (the chunked design needs only this)."""
+        vs = [self._d[k] for k in keys]
+        self.stats.n_queries += 1
+        self.stats.n_values += len(vs)
+        self.stats.bytes_fetched += sum(len(v) for v in vs)
+        return vs
+
+    def multiget_naive(self, keys: Sequence[str]) -> List[bytes]:
+        """Per-key round-trips — the §2.3 baseline behaviour."""
+        return [self.get(k) for k in keys]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._d
+
+    def total_stored_bytes(self) -> int:
+        return sum(len(v) for v in self._d.values())
+
+
+class ShardedDeviceKVS:
+    """Fixed-slot store living as a device-sharded JAX array.
+
+    Values are padded into ``slot_bytes`` slots; longer values span
+    consecutive slots.  ``multiget`` issues a single ``jnp.take`` over the
+    sharded table — on a real mesh this is a batched all-gather whose volume
+    is span × slot size.  Host-side writes are buffered and flushed in one
+    device_put (ingest is batched, mirroring §4's delta store).
+    """
+
+    def __init__(self, slot_bytes: int = 1 << 16, n_slots: int = 1024,
+                 mesh=None) -> None:
+        import jax
+        import jax.numpy as jnp
+        self._jax = jax
+        self._jnp = jnp
+        self.slot_bytes = int(slot_bytes)
+        self.slot_words = self.slot_bytes // 4
+        self.mesh = mesh
+        self._table = None                       # device array, lazily built
+        self._host = np.zeros((n_slots, self.slot_words), dtype=np.uint32)
+        self._dirty = True
+        self._next_slot = 0
+        self._dir: Dict[str, Tuple[int, int, int]] = {}  # key -> (slot, n, len)
+        self.stats = KVSStats()
+        self._gather = jax.jit(lambda t, idx: jnp.take(t, idx, axis=0))
+
+    # ------------------------------------------------------------------ put
+    def put(self, key: str, value: bytes) -> None:
+        n = max(1, math.ceil(len(value) / self.slot_bytes))
+        if key in self._dir:
+            slot, old_n, _ = self._dir[key]
+            if old_n < n:                       # relocate
+                slot = self._alloc(n)
+        else:
+            slot = self._alloc(n)
+        buf = np.zeros(n * self.slot_words, dtype=np.uint32)
+        raw = np.frombuffer(value.ljust(n * self.slot_bytes, b"\0"), dtype=np.uint32)
+        buf[:] = raw
+        self._host[slot:slot + n] = buf.reshape(n, self.slot_words)
+        self._dir[key] = (slot, n, len(value))
+        self._dirty = True
+        self.stats.bytes_stored += len(value)
+
+    def _alloc(self, n: int) -> int:
+        slot = self._next_slot
+        self._next_slot += n
+        while self._next_slot > len(self._host):
+            self._host = np.concatenate(
+                [self._host, np.zeros_like(self._host)], axis=0)
+        return slot
+
+    def _sync(self):
+        if self._dirty or self._table is None:
+            jnp = self._jnp
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                ndev = math.prod(self.mesh.devices.shape)
+                pad = (-len(self._host)) % ndev
+                host = np.pad(self._host, ((0, pad), (0, 0)))
+                sh = NamedSharding(self.mesh, P(tuple(self.mesh.axis_names), None))
+                self._table = self._jax.device_put(host, sh)
+            else:
+                self._table = jnp.asarray(self._host)
+            self._dirty = False
+        return self._table
+
+    # ------------------------------------------------------------------ get
+    def multiget(self, keys: Sequence[str]) -> List[bytes]:
+        table = self._sync()
+        metas = [self._dir[k] for k in keys]
+        idx = np.concatenate([np.arange(s, s + n) for s, n, _ in metas]) \
+            if metas else np.zeros(0, np.int64)
+        rows = np.asarray(self._gather(table, self._jnp.asarray(idx)))
+        out: List[bytes] = []
+        off = 0
+        for _, n, ln in metas:
+            out.append(rows[off:off + n].tobytes()[:ln])
+            off += n
+        self.stats.n_queries += 1
+        self.stats.n_values += len(keys)
+        self.stats.bytes_fetched += int(rows.nbytes)
+        return out
+
+    def get(self, key: str) -> bytes:
+        return self.multiget([key])[0]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._dir

@@ -1,0 +1,39 @@
+"""SHINGLE partitioning (§3.1, Algorithms 1–2).
+
+For every record, compute ``l`` min-hashes of its version-membership set
+(the Pallas ``minhash`` kernel does the hashing), sort records
+lexicographically by their shingle vectors — which places records with
+highly-overlapping version sets next to each other — and pack them into
+fixed-size chunks in that order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ...kernels import ops as kops
+from ..types import Partitioning
+from ..version_graph import VersionGraph
+from .base import ChunkPacker
+
+
+@dataclass
+class ShinglePartitioner:
+    n_hashes: int = 8
+    seed: int = 0
+    name: str = "shingle"
+
+    def partition(self, graph: VersionGraph, capacity: int) -> Partitioning:
+        indptr, vidx = graph.record_version_index_csr()
+        a, b = kops.hash_family(self.n_hashes, self.seed)
+        shingles = kops.minhash_csr(indptr, vidx.astype(np.int64), a, b)  # (R, L)
+        # lexicographic order over the shingle vector; ties broken by origin
+        # version then primary key for determinism.
+        keys = graph.store.keys()
+        origins = graph.store.origin_versions()
+        order = np.lexsort((keys, origins) + tuple(shingles[:, l]
+                           for l in range(self.n_hashes - 1, -1, -1)))
+        packer = ChunkPacker(graph.store.sizes, capacity)
+        packer.place_many(order)
+        return packer.finish(self.name)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: bitmap AND + popcount for index-ANDing (§2.4).
+
+Record/range retrieval intersects the two lossy projections (key→chunks and
+version→chunks).  With chunk membership as bitmaps (1 bit per chunk), the
+intersection is a bitwise AND and the candidate count a popcount.  The kernel
+ANDs a batch of key bitmaps (N, W) against one version bitmap (1, W) held in
+VMEM across the whole grid, emitting the AND tiles plus per-row popcounts.
+
+Popcount uses the SWAR bit-twiddle (no LUT: TPU VPU has no gather), entirely
+in uint32 lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+
+
+def _popcount32(v: jax.Array) -> jax.Array:
+    v = v - ((v >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    return (v * np.uint32(0x01010101)) >> 24
+
+
+def _and_popcount_kernel(bms_ref, row_ref, out_ref, cnt_ref):
+    x = bms_ref[...] & row_ref[...]            # (BLOCK_N, W) & (1, W) broadcast
+    out_ref[...] = x
+    cnt_ref[0, :] = jnp.sum(_popcount32(x).astype(jnp.int32), axis=1)
+
+
+def and_popcount(bitmaps: jax.Array, row: jax.Array,
+                 *, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """AND a batch of bitmaps against one row bitmap, with popcounts.
+
+    Args:
+      bitmaps: (N, W) uint32, N % 128 == 0.
+      row: (1, W) uint32 (broadcast against every row).
+    Returns:
+      (anded (N, W) uint32, popcounts (N,) int32).
+    """
+    N, W = bitmaps.shape
+    if row.shape != (1, W):
+        raise ValueError(f"row must be (1, {W}), got {row.shape}")
+    if N % BLOCK_N:
+        raise ValueError(f"N={N} must be a multiple of {BLOCK_N}")
+    grid = (N // BLOCK_N,)
+    anded, counts = pl.pallas_call(
+        _and_popcount_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, BLOCK_N), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, W), jnp.uint32),
+            jax.ShapeDtypeStruct((1, N), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bitmaps, row)
+    return anded, counts[0]

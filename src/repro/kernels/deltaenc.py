@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: XOR-delta record encoding (§3.4 record-level compression).
+
+Sub-chunk compression delta-encodes each record against its version-tree
+parent.  For fixed-width payloads (the framework's checkpoint blocks and the
+paper's equal-sized JSON records) the delta is a word-wise XOR — zero words
+mark unchanged bytes, which downstream entropy coding (zlib on host) or
+sparse encoding exploits.  The same kernel powers gradient/update compression
+in ``train/grad_compress.py``.
+
+Layout: payloads as (N, W) uint32 words.  Grid streams (BLOCK_N, W) tiles
+through VMEM; outputs the XOR tile plus a per-record changed-word count laid
+out (1, N) so the record axis rides the lane dimension.  Decode is the same
+XOR (an involution), so one kernel serves both directions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+
+
+def _xor_delta_kernel(parent_ref, child_ref, delta_ref, count_ref):
+    p = parent_ref[...]                    # (BLOCK_N, W) uint32
+    c = child_ref[...]
+    d = p ^ c
+    delta_ref[...] = d
+    count_ref[0, :] = jnp.sum((d != 0).astype(jnp.int32), axis=1)
+
+
+def xor_delta(parent: jax.Array, child: jax.Array,
+              *, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """XOR-delta encode (or decode) fixed-width payloads.
+
+    Args:
+      parent, child: (N, W) uint32; N % 128 == 0 (callers pad).
+    Returns:
+      (delta (N, W) uint32, changed_words (N,) int32).
+    """
+    N, W = parent.shape
+    if parent.shape != child.shape:
+        raise ValueError("parent/child shape mismatch")
+    if N % BLOCK_N:
+        raise ValueError(f"N={N} must be a multiple of {BLOCK_N}")
+    grid = (N // BLOCK_N,)
+    delta, counts = pl.pallas_call(
+        _xor_delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, BLOCK_N), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, W), jnp.uint32),
+            jax.ShapeDtypeStruct((1, N), jnp.int32),
+        ],
+        interpret=interpret,
+    )(parent, child)
+    return delta, counts[0]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function mirrors its kernel's contract exactly (same shapes, dtypes and
+padding conventions) using only high-level jnp ops.  Kernel tests sweep
+shapes/dtypes and assert bit-exact equality against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_VERSION = -1
+_EMPTY_HASH = np.uint32(0xFFFFFFFF)
+
+
+def minhash_ref(versions_padded: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """(R, D) padded rows, (L,) hash params → (L, R) uint32 min-hashes."""
+    valid = versions_padded != PAD_VERSION                      # (R, D)
+    vu = versions_padded.astype(jnp.uint32)                     # (R, D)
+    hv = a[:, None, None] * vu[None] + b[:, None, None]         # (L, R, D)
+    hv = jnp.where(valid[None], hv, _EMPTY_HASH)
+    return jnp.min(hv, axis=-1)                                 # (L, R)
+
+
+def xor_delta_ref(parent: jax.Array, child: jax.Array) -> tuple[jax.Array, jax.Array]:
+    delta = parent ^ child
+    counts = jnp.sum((delta != 0).astype(jnp.int32), axis=1)
+    return delta, counts
+
+
+def popcount32_ref(v: jax.Array) -> jax.Array:
+    v = v - ((v >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    return (v * np.uint32(0x01010101)) >> 24
+
+
+def and_popcount_ref(bitmaps: jax.Array, row: jax.Array) -> tuple[jax.Array, jax.Array]:
+    anded = bitmaps & row
+    counts = jnp.sum(popcount32_ref(anded).astype(jnp.int32), axis=1)
+    return anded, counts

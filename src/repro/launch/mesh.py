@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  Single pod: 16×16 = 256 chips,
+axes (data, model).  Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model);
+the pod axis folds into data-parallel/FSDP sharding via the default rules.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Small mesh for local smoke runs (1 device by default)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

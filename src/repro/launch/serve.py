@@ -1,0 +1,52 @@
+"""Serving driver: batched greedy generation with a versioned model registry.
+
+  python -m repro.launch.serve --arch granite-moe-1b-a400m --reduced \
+      --batch 8 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS
+from ..data.pipeline import synthetic_batch
+from ..models.model import build_model, init_params
+from ..serve.engine import Engine
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m",
+                    choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--waves", type=int, default=3,
+                    help="batches served back-to-back (continuous batching)")
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.__class__(**{**cfg.__dict__, "remat": "none"})
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=args.prompt_len + args.gen + 8)
+
+    for wave in range(args.waves):
+        batch = {"tokens": synthetic_batch(cfg, wave, args.batch,
+                                           args.prompt_len)["tokens"]}
+        t0 = time.time()
+        toks = eng.generate(batch, steps=args.gen)
+        dt = time.time() - t0
+        print(f"wave {wave}: {toks.shape[0]}×{toks.shape[1]} tokens "
+              f"in {dt:.2f}s ({toks.shape[0]*toks.shape[1]/dt:.1f} tok/s)"
+              + (" [incl. compile]" if wave == 0 else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    run()

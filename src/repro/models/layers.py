@@ -1,0 +1,639 @@
+"""Model building blocks, written against a uniform param-def system.
+
+All parameters are declared as ``ParamDef(shape, logical_axes)`` trees so the
+same builder serves three uses: abstract ShapeDtypeStructs (dry-run), sharded
+NamedSharding specs (via sharding.rules), and concrete initialization (smoke
+tests / the ~100M training example).
+
+Blocks: RMSNorm, RoPE, GQA attention (dense, blockwise-flash, and decode
+modes), SwiGLU/GELU MLP, top-k MoE with capacity-based scatter dispatch
+(EP-shardable, no one-hot einsum so cost_analysis stays honest), and the
+Mamba2 SSD mixer as a chunked ``lax.scan`` (VMEM-bounded working set).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.rules import constrain
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------- param defs
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | ones | zeros | small_normal
+    scale: float = 0.02
+
+    def abstract(self, dtype, env=None) -> jax.ShapeDtypeStruct:
+        sharding = env.sharding_for(self.shape, self.axes) if env else None
+        return jax.ShapeDtypeStruct(self.shape, dtype, sharding=sharding)
+
+    def initialize(self, key, dtype) -> jax.Array:
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        scale = self.scale
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(dtype)
+
+
+def tree_abstract(defs, dtype, env=None):
+    return jax.tree.map(lambda d: d.abstract(dtype, env), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_init(defs, key, dtype):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [d.initialize(k, dtype)
+                                        for d, k in zip(leaves, keys)])
+
+
+def tree_pspecs(defs, env):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda d: env.sharding_for(d.shape, d.axes), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# --------------------------------------------------------------------- norms
+def _rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with a memory-lean hand-written backward.
+
+    JAX's autodiff of the straightforward formulation materializes several
+    f32 (B,S,D) intermediates at fusion boundaries in the backward pass —
+    measured at ~640 GB/tensor on the kimi-k2 train cell (§Perf kimi it3).
+    The custom VJP keeps every (B,S,D) boundary tensor in the input dtype,
+    with only (B,S,1) f32 row statistics."""
+    return _rmsnorm_ref(x, scale, eps)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    rstd = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = (xf * rstd).astype(x.dtype) * scale
+    return y, (x, scale, rstd)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, scale, rstd = res
+    xn = (x.astype(jnp.float32) * rstd).astype(x.dtype)        # normalized, bf16
+    gs = g * scale                                             # bf16
+    dscale = jnp.sum((g.astype(jnp.float32)
+                      * xn.astype(jnp.float32)).reshape(-1, x.shape[-1]),
+                     axis=0).astype(scale.dtype)
+    c = jnp.mean((gs.astype(jnp.float32) * xn.astype(jnp.float32)),
+                 axis=-1, keepdims=True)                       # (B,S,1) f32
+    dx = ((gs.astype(jnp.float32) - xn.astype(jnp.float32) * c)
+          * rstd).astype(x.dtype)
+    return dx, dscale
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) / half))          # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def attn_defs(cfg: ModelConfig, L: int) -> Dict[str, ParamDef]:
+    D, Hq, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d = {
+        "norm": ParamDef((L, D), ("layers", None), init="ones"),
+        "wq": ParamDef((L, D, Hq, dh), ("layers", "embed", "heads", "head_dim")),
+        "wk": ParamDef((L, D, Hkv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((L, D, Hkv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((L, Hq, dh, D), ("layers", "heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((L, Hq, dh), ("layers", "heads", "head_dim"), init="zeros")
+        d["bk"] = ParamDef((L, Hkv, dh), ("layers", "kv_heads", "head_dim"), init="zeros")
+        d["bv"] = ParamDef((L, Hkv, dh), ("layers", "kv_heads", "head_dim"), init="zeros")
+    return d
+
+
+def _split_heads_q(q, Hkv):
+    # (B, S, Hq, dh) -> (B, S, Hkv, G, dh)
+    B, S, Hq, dh = q.shape
+    return q.reshape(B, S, Hkv, Hq // Hkv, dh)
+
+
+def _sm_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.attn_softmax_dtype == "bf16" else jnp.float32
+
+
+def _dense_attention(q, k, v, *, causal: bool, q_offset, kv_len_mask=None,
+                     softmax_dtype=jnp.float32):
+    """q: (B,Sq,Hkv,G,dh); k/v: (B,Skv,Hkv,dh). Returns (B,Sq,Hkv,G,dh).
+
+    ``softmax_dtype`` controls the dtype of the *materialized* S×S tensors
+    (logits / exp / probs); max/sum reductions always accumulate in f32.
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(softmax_dtype)
+    logits = logits * softmax_dtype(1.0 / math.sqrt(dh))
+    Sq, Skv = q.shape[1], k.shape[1]
+    neg = softmax_dtype(-1e30)
+    if causal:
+        qi = jax.lax.broadcasted_iota(jnp.int32, (Sq, Skv), 0) + q_offset
+        ki = jax.lax.broadcasted_iota(jnp.int32, (Sq, Skv), 1)
+        logits = jnp.where(qi >= ki, logits, neg)
+    if kv_len_mask is not None:                       # (B, Skv) bool
+        logits = jnp.where(kv_len_mask[:, None, None, None, :], logits, neg)
+    # NB: an explicit max/exp/div decomposition and bf16-materialized
+    # softmax were both tried and REFUTED on the traffic model (XLA inserts
+    # extra convert copies in the backward pass) — see EXPERIMENTS.md §Perf.
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def _blockwise_attention(q, k, v, *, causal: bool, q_block: int, kv_block: int):
+    """Flash-style online-softmax attention in pure JAX: scan over q blocks
+    (outer) and kv blocks (inner), O(Sq·dh + qb·kb) live memory."""
+    B, Sq, Hkv, G, dh = q.shape
+    Skv = k.shape[1]
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    assert Sq % qb == 0 and Skv % kb == 0
+    nq, nk = Sq // qb, Skv // kb
+    scale = 1.0 / math.sqrt(dh)
+
+    qr = jnp.moveaxis(q.reshape(B, nq, qb, Hkv, G, dh), 1, 0)      # (nq,B,qb,...)
+    kr = jnp.moveaxis(k.reshape(B, nk, kb, Hkv, dh), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kb, Hkv, dh), 1, 0)
+
+    def q_step(_, qi_blk):
+        qi, q_i = qi_blk                                            # index, block
+
+        def kv_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, k_j, v_j = kj_blk
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j).astype(jnp.float32) * scale
+            if causal:
+                qidx = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+                kidx = kj * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+                s = jnp.where(qidx >= kidx, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(q.dtype), v_j).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, Hkv, G, qb), -jnp.inf, jnp.float32),
+                jnp.zeros((B, Hkv, G, qb), jnp.float32),
+                jnp.zeros((B, Hkv, G, qb, dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init,
+                                      (jnp.arange(nk), kr, vr))
+        out = (acc / l[..., None]).astype(q.dtype)                  # (B,Hkv,G,qb,dh)
+        return None, jnp.moveaxis(out, 3, 1)                        # (B,qb,Hkv,G,dh)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))    # (nq,B,qb,...)
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, Hkv, G, dh)
+
+
+def attention(p, x: jax.Array, cfg: ModelConfig, *, causal: bool = True,
+              mode: str = "train", cache: Optional[dict] = None,
+              pos=None, kv_x: Optional[jax.Array] = None,
+              is_cross: bool = False,
+              positions: Optional[jax.Array] = None):
+    """Pre-norm GQA attention block.  Returns (residual_out, new_cache).
+
+    modes: "train"/"prefill" — full-sequence; prefill additionally emits a KV
+    cache.  "decode" — S==1 step against ``cache`` at position ``pos``.
+    ``kv_x``/``is_cross`` switch to cross-attention (keys/values from encoder
+    states; in decode the cache holds precomputed cross K/V, never updated).
+    """
+    B, S, D = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    cross = is_cross or kv_x is not None
+    if cross and cache is not None and mode == "decode":
+        k, v = cache["k"], cache["v"]          # precomputed cross K/V
+        new_cache = cache
+    else:
+        src = kv_x if cross else h
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        new_cache = None
+
+    if positions is None:
+        positions = (jnp.arange(S, dtype=jnp.int32) if mode != "decode"
+                     else jnp.asarray(pos, jnp.int32)[None].reshape(1,))
+    if cfg.use_rope and not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    qg = _split_heads_q(q, Hkv)
+
+    reshard_batch = (cfg.attn_batch_shard and mode in ("train", "prefill")
+                     and not cross)
+    if reshard_batch:
+        qg = constrain(qg, "attn_batch", None, None, None, None)
+        k = constrain(k, "attn_batch", None, None, None)
+        v = constrain(v, "attn_batch", None, None, None)
+
+    if mode == "decode" and not cross:
+        # write into the cache, attend over valid prefix
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                               (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                               (0, pos, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        Skv = k_cache.shape[1]
+        valid = (jax.lax.broadcasted_iota(jnp.int32, (1, Skv), 1) <= pos)
+        valid = jnp.broadcast_to(valid, (B, Skv))
+        out = _dense_attention(qg, k_cache, v_cache, causal=False,
+                               q_offset=0, kv_len_mask=valid,
+                               softmax_dtype=_sm_dtype(cfg))
+    elif mode == "decode" and cross:
+        out = _dense_attention(qg, k, v, causal=False, q_offset=0,
+                               softmax_dtype=_sm_dtype(cfg))
+    elif cfg.attn_impl == "blockwise" and mode in ("train", "prefill") and not cross:
+        out = _blockwise_attention(qg, k, v, causal=causal,
+                                   q_block=cfg.attn_block_q,
+                                   kv_block=cfg.attn_block_kv)
+    else:
+        out = _dense_attention(qg, k, v, causal=causal and not cross,
+                               q_offset=0, softmax_dtype=_sm_dtype(cfg))
+
+    if mode == "prefill":
+        new_cache = {"k": k, "v": v}   # cross prefill caches encoder K/V too
+    if reshard_batch:
+        out = constrain(out, "attn_batch", None, None, None, None)
+    out = out.reshape(B, S, Hq, dh)
+    out = constrain(out, "batch", None, "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x + y, new_cache
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_defs(cfg: ModelConfig, L: int) -> Dict[str, ParamDef]:
+    D, F = cfg.d_model, cfg.d_ff
+    d = {"norm": ParamDef((L, D), ("layers", None), init="ones"),
+         "wu": ParamDef((L, D, F), ("layers", "embed", "mlp")),
+         "wd": ParamDef((L, F, D), ("layers", "mlp", "embed"))}
+    if cfg.act == "silu_glu":
+        d["wg"] = ParamDef((L, D, F), ("layers", "embed", "mlp"))
+    return d
+
+
+def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", h, p["wu"])
+    if cfg.act == "silu_glu":
+        up = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, p["wg"])) * up
+    else:
+        up = jax.nn.gelu(up)
+    y = jnp.einsum("bsf,fd->bsd", up, p["wd"])
+    return x + y
+
+
+# ----------------------------------------------------------------------- MoE
+def moe_defs(cfg: ModelConfig, L: int) -> Dict[str, ParamDef]:
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_ff_e
+    return {
+        "norm": ParamDef((L, D), ("layers", None), init="ones"),
+        "router": ParamDef((L, D, E), ("layers", "embed", "experts")),
+        "wg": ParamDef((L, E, D, Fe), ("layers", "experts", "embed", "expert_mlp")),
+        "wu": ParamDef((L, E, D, Fe), ("layers", "experts", "embed", "expert_mlp")),
+        "wd": ParamDef((L, E, Fe, D), ("layers", "experts", "expert_mlp", "embed")),
+    }
+
+
+def moe(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with capacity-bounded scatter dispatch.
+
+    Dispatch/combine are gathers/scatters (zero matmul FLOPs — keeps the
+    roofline's MODEL_FLOPS/HLO_FLOPs ratio honest).  Position-in-expert is
+    computed with a sort (O(Tk log Tk)) instead of the (T, E) one-hot cumsum
+    (O(T·E) memory — prohibitive at kimi-k2 scale).  Returns (out, aux_loss).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    h = rmsnorm(x, p["norm"], cfg.norm_eps).reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", h, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- position within expert via sort --------------------------------
+    cap = int(math.ceil(T * K / E * cfg.capacity_factor))
+    cap = max(cap, K)
+    flat_e = eid.reshape(-1)                                # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(T * K) - first[sorted_e]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted).reshape(T, K)
+    keep = pos < cap                                        # capacity drop
+    pos_c = jnp.where(keep, pos, cap)                       # overflow slot
+
+    # ---- dispatch: (E, cap+1, D) scatter ---------------------------------
+    buf = jnp.zeros((E, cap + 1, D), x.dtype)
+    xk = jnp.broadcast_to(h[:, None, :], (T, K, D)) * keep[..., None].astype(x.dtype)
+    buf = buf.at[eid.reshape(-1), pos_c.reshape(-1)].add(
+        xk.reshape(T * K, D))
+    buf = buf[:, :cap]
+    buf = constrain(buf, "experts", "capacity", None)
+
+    # ---- expert computation ---------------------------------------------
+    up = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", up, p["wd"])
+    out_buf = constrain(out_buf, "experts", "capacity", None)
+
+    # ---- combine: gather back --------------------------------------------
+    got = out_buf[eid.reshape(-1), jnp.minimum(pos_c, cap - 1).reshape(-1)]
+    got = got.reshape(T, K, D) * (gate * keep).astype(x.dtype)[..., None]
+    y = got.sum(axis=1).reshape(B, S, D)
+
+    # ---- load-balance aux loss (Switch-style) -----------------------------
+    frac_tokens = jnp.zeros(E, jnp.float32).at[eid.reshape(-1)].add(
+        1.0 / (T * K))
+    mean_prob = probs.mean(axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(frac_tokens * mean_prob)
+    return x + y, aux
+
+
+def moe_shard_map(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE with *zero token exchange* (beyond-paper §Perf).
+
+    Observation: activations are batch-sharded over the data axes and
+    replicated over the model axis, while experts are sharded over the model
+    axis — so every (data, model) device already holds all of its data
+    shard's tokens AND its expert subset.  Dispatch/combine are therefore
+    purely local; the only communication is (a) the FSDP all-gather of the
+    expert weights' embed shards (identical to the dense path) and (b) one
+    psum of the combined output over the model axis.  This replaces GSPMD's
+    scatter→all-reduce dispatch lowering (≈ TBs of ring traffic per step on
+    the MoE cells; see EXPERIMENTS.md §Perf).
+
+    Capacity semantics: per (data-shard, expert) — the per-device capacity
+    real EP systems use — vs the gspmd path's global per-expert capacity.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..sharding.rules import current_env
+    env = current_env()
+    if env is None:
+        return moe(p, x, cfg)          # no mesh (unit tests): gspmd path
+    mesh = env.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = "model"
+    E, K = cfg.n_experts, cfg.moe_top_k
+    if tp not in mesh.axis_names:
+        return moe(p, x, cfg)
+    tp_size = mesh.shape[tp]
+    dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    if E % tp_size or x.shape[0] % dp_size or x.shape[1] == 1:
+        # indivisible experts/batch (e.g. batch-1 long-context decode), or
+        # single-token decode (dispatch is trivial; the local-dispatch
+        # machinery measurably regresses it — §Perf): gspmd fallback
+        return moe(p, x, cfg)
+    E_l = E // tp_size
+
+    def local_moe(norm, router, wg, wu, wd, x_l):
+        # gather FSDP weight shards (backward: psum_scatter — ZeRO-3)
+        for ax in dp:
+            router = jax.lax.all_gather(router, ax, axis=0, tiled=True)
+            wg = jax.lax.all_gather(wg, ax, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, ax, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, ax, axis=2, tiled=True)
+        B_l, S, D = x_l.shape
+        T = B_l * S
+        h = rmsnorm(x_l, norm, cfg.norm_eps).reshape(T, D)
+        logits = jnp.einsum("td,de->te", h, router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eid = jax.lax.top_k(probs, K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        cap = max(K, int(math.ceil(T * K / E * cfg.capacity_factor)))
+        flat_e = eid.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        first = jnp.searchsorted(flat_e[order], jnp.arange(E), side="left")
+        pos_sorted = jnp.arange(T * K) - first[flat_e[order]]
+        pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted).reshape(T, K)
+        keep = pos < cap
+
+        m_idx = jax.lax.axis_index(tp)
+        local_e = eid - m_idx * E_l
+        mine = (local_e >= 0) & (local_e < E_l) & keep
+        e_c = jnp.where(mine, local_e, 0)
+        pos_c = jnp.where(mine, pos, cap)
+
+        # gather-based dispatch: scatter only the int32 slot->token map, then
+        # gather token rows — avoids materializing the (T, K, D) broadcast
+        # (≈6× dispatch traffic; see §Perf granite it3)
+        slot = (e_c * (cap + 1) + pos_c).reshape(-1)          # (T*K,)
+        tok_of = jnp.full(E_l * (cap + 1), -1, jnp.int32) \
+            .at[slot].set(jnp.arange(T * K, dtype=jnp.int32) // K)
+        filled = (tok_of >= 0)[:, None].astype(x_l.dtype)
+        buf = (h[jnp.maximum(tok_of, 0)] * filled) \
+            .reshape(E_l, cap + 1, D)[:, :cap]
+
+        up = jnp.einsum("ecd,edf->ecf", buf, wu)
+        up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * up
+        out_buf = jnp.einsum("ecf,efd->ecd", up, wd)
+
+        got = out_buf[e_c.reshape(-1), jnp.minimum(pos_c, cap - 1).reshape(-1)]
+        got = got.reshape(T, K, D) * (gate * mine).astype(x_l.dtype)[..., None]
+        y = jax.lax.psum(got.sum(axis=1), tp).reshape(B_l, S, D)
+
+        frac = jnp.zeros(E, jnp.float32).at[flat_e].add(1.0 / (T * K))
+        aux = cfg.router_aux_coef * E * jnp.sum(frac * probs.mean(0))
+        for ax in dp:
+            aux = jax.lax.pmean(aux, ax)
+        return y, aux
+
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    y, aux = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(None),                       # norm: replicated
+                  P(dp_spec, None),              # router: (D/dp, E)
+                  P(tp, dp_spec, None),          # wg: (E/tp, D/dp, F)
+                  P(tp, dp_spec, None),          # wu
+                  P(tp, None, dp_spec),          # wd: (E/tp, F, D/dp)
+                  P(dp_spec, None, None)),       # x: (B/dp, S, D)
+        out_specs=(P(dp_spec, None, None), P()),
+        check_rep=False,
+    )(p["norm"], p["router"], p["wg"], p["wu"], p["wd"], x)
+    return x + y, aux
+
+
+# ------------------------------------------------------------------ SSD/SSM
+def ssm_defs(cfg: ModelConfig, L: int) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    d_in, H = cfg.d_inner, cfg.ssm_heads
+    GN = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "norm": ParamDef((L, D), ("layers", None), init="ones"),
+        "in_z": ParamDef((L, D, d_in), ("layers", "embed", "ssm_proj")),
+        "in_x": ParamDef((L, D, d_in), ("layers", "embed", "ssm_proj")),
+        "in_B": ParamDef((L, D, GN), ("layers", "embed", None)),
+        "in_C": ParamDef((L, D, GN), ("layers", "embed", None)),
+        "in_dt": ParamDef((L, D, H), ("layers", "embed", "ssm_heads")),
+        "conv_x": ParamDef((L, cfg.conv_width, d_in), ("layers", None, "ssm_proj"),
+                           init="small_normal", scale=0.1),
+        "conv_B": ParamDef((L, cfg.conv_width, GN), ("layers", None, None),
+                           init="small_normal", scale=0.1),
+        "conv_C": ParamDef((L, cfg.conv_width, GN), ("layers", None, None),
+                           init="small_normal", scale=0.1),
+        "A_log": ParamDef((L, H), ("layers", "ssm_heads"), init="zeros"),
+        "Dskip": ParamDef((L, H), ("layers", "ssm_heads"), init="ones"),
+        "dt_bias": ParamDef((L, H), ("layers", "ssm_heads"), init="zeros"),
+        "gate_norm": ParamDef((L, d_in), ("layers", "ssm_proj"), init="ones"),
+        "out": ParamDef((L, d_in, D), ("layers", "ssm_proj", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (W, C) depthwise causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return jax.lax.conv_general_dilated(
+        xp, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+
+
+def _ssd_chunk_scan(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD (state-space duality) scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm/Cm: (B,S,N) (single group broadcast over heads).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(B, nc, Q, *a.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, Bm, Cm))      # (nc, B, Q, ...)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        x_c, dt_c, B_c, C_c = inp                           # (B,Q,H,P) etc.
+        dA = dt_c * A                                       # (B,Q,H) ≤ 0
+        cs = jnp.cumsum(dA, axis=1)                         # inclusive
+        # inter-chunk: contribution of carried state
+        y_off = jnp.einsum("bqn,bhpn->bqhp", C_c,
+                           state.astype(x_c.dtype)) * jnp.exp(cs)[..., None].astype(x_c.dtype)
+        # intra-chunk (masked decay kernel)
+        att = jnp.einsum("bqn,bkn->bqk", C_c, B_c)          # (B,Q,Q)
+        Ld = cs[:, :, None, :] - cs[:, None, :, :]          # (B,Q,K,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        w = att[..., None] * jnp.where(tri[None, :, :, None],
+                                       jnp.exp(Ld), 0.0).astype(x_c.dtype)
+        w = w * dt_c.astype(x_c.dtype)[:, None, :, :]
+        y_in = jnp.einsum("bqkh,bkhp->bqhp", w, x_c)
+        # state update
+        decay_end = jnp.exp(cs[:, -1:, :] - cs)             # (B,Q,H)
+        contrib = jnp.einsum("bqn,bqh,bqhp->bhpn", B_c,
+                             (dt_c * decay_end), x_c).astype(jnp.float32)
+        state = state * jnp.exp(cs[:, -1, :]).astype(jnp.float32)[:, :, None, None] \
+            + contrib
+        return state, y_in + y_off
+
+    final, yc = jax.lax.scan(step, init_state, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, P)
+    return y, final
+
+
+def ssm_block(p, x: jax.Array, cfg: ModelConfig, *, mode: str = "train",
+              cache: Optional[dict] = None):
+    """Mamba2 (SSD) mixer.  Returns (residual_out, new_cache).
+
+    cache (decode): {"state": (B,H,P,N) f32, "conv": (B,W-1,C)}.
+    """
+    B, S, D = x.shape
+    d_in, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    N = cfg.ssm_groups * cfg.ssm_state
+    W = cfg.conv_width
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+
+    z = jnp.einsum("bsd,de->bse", h, p["in_z"])
+    xs = jnp.einsum("bsd,de->bse", h, p["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", h, p["in_dt"])
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    if mode == "decode":
+        conv_cat = jnp.concatenate([xs, Bm, Cm], axis=-1)   # (B,1,C)
+        hist = jnp.concatenate([cache["conv"], conv_cat], axis=1)  # (B,W,C)
+        wcat = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+        conv_out = jnp.einsum("bwc,wc->bc", hist, wcat)[:, None, :]
+        conv_out = jax.nn.silu(conv_out)
+        xs2 = conv_out[..., :d_in]
+        Bm2 = conv_out[..., d_in:d_in + N]
+        Cm2 = conv_out[..., d_in + N:]
+        xh = xs2.reshape(B, H, P)
+        state = cache["state"]
+        dA = jnp.exp(dt[:, 0] * A)                          # (B,H)
+        contrib = jnp.einsum("bn,bh,bhp->bhpn", Bm2[:, 0], dt[:, 0], xh)
+        state = state * dA[..., None, None] + contrib.astype(jnp.float32)
+        y = jnp.einsum("bn,bhpn->bhp", Cm2[:, 0], state.astype(x.dtype))
+        y = (y + p["Dskip"].astype(x.dtype)[None, :, None] * xh).astype(x.dtype)
+        y = y.reshape(B, 1, d_in)
+        new_cache = {"state": state, "conv": hist[:, 1:]}
+    else:
+        raw = jnp.concatenate([xs, Bm, Cm], axis=-1)        # pre-conv inputs
+        xs = jax.nn.silu(_causal_depthwise_conv(xs, p["conv_x"]))
+        Bm = jax.nn.silu(_causal_depthwise_conv(Bm, p["conv_B"]))
+        Cm = jax.nn.silu(_causal_depthwise_conv(Cm, p["conv_C"]))
+        xh = xs.reshape(B, S, H, P)
+        y, final_state = _ssd_chunk_scan(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+        y = y + p["Dskip"].astype(x.dtype)[None, None, :, None] * xh
+        y = y.reshape(B, S, d_in)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": final_state, "conv": raw[:, -(W - 1):]}
+
+    y = y * jax.nn.silu(z[:, :y.shape[1]])
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    return x + out, new_cache

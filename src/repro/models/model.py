@@ -1,0 +1,411 @@
+"""Model assembly: config → params / train_loss / prefill / decode.
+
+Layers are stacked per *position-in-period* and scanned over groups
+(`lax.scan`), so HLO size and compile time are depth-independent — a 61-layer
+1T-param MoE compiles as one group body.  Heterogeneous patterns (Jamba's
+attn/ssm 1:7 interleave with alternating dense/MoE FFN) unroll the period
+inside the scanned group body.
+
+Caches mirror the param structure: per position, stacked over groups, carried
+through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.rules import constrain
+from .config import ModelConfig
+from .layers import (ParamDef, attention, attn_defs, mlp, mlp_defs, moe,
+                     moe_defs, moe_shard_map, rmsnorm, ssm_block, ssm_defs,
+                     tree_abstract, tree_init)
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ builders
+def _block_defs(cfg: ModelConfig, plan, G: int) -> List[Dict[str, Any]]:
+    """Param defs per position within the scan period, stacked over G groups."""
+    out = []
+    for mixer, ffn in plan:
+        d: Dict[str, Any] = {}
+        if mixer == "attn":
+            d["attn"] = attn_defs(cfg, G)
+        else:
+            d["ssm"] = ssm_defs(cfg, G)
+        if ffn == "dense":
+            d["mlp"] = mlp_defs(cfg, G)
+        elif ffn == "moe":
+            d["moe"] = moe_defs(cfg, G)
+        out.append(d)
+    return out
+
+
+def param_defs(cfg: ModelConfig) -> Params:
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    defs: Params = {
+        "embed": ParamDef((Vp, D), ("vocab", "embed"), scale=0.02),
+        "final_norm": ParamDef((D,), (None,), init="ones"),
+        "blocks": _block_defs(cfg, cfg.layer_plan(), cfg.n_groups_scan),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((D, Vp), ("embed", "vocab"), scale=0.02)
+    if cfg.family == "encdec":
+        enc_plan = [("attn", "dense")] * 1
+        defs["enc_blocks"] = _block_defs(cfg, enc_plan, cfg.n_encoder_layers)
+        defs["enc_final_norm"] = ParamDef((D,), (None,), init="ones")
+        defs["cross_blocks"] = [{"attn": attn_defs(cfg, cfg.n_groups_scan)}]
+        # learned positions sized for the largest assigned decode shape (the
+        # real whisper caps at 1500 frames / 448 tokens — stub, documented)
+        defs["pos_embed"] = ParamDef((32768, D), (None, "embed"), scale=0.01)
+    return defs
+
+
+def abstract_params(cfg: ModelConfig, env=None):
+    return tree_abstract(param_defs(cfg), cfg.jdtype, env)
+
+
+def init_params(cfg: ModelConfig, key):
+    return tree_init(param_defs(cfg), key, cfg.jdtype)
+
+
+# ---------------------------------------------------------------- cache defs
+def cache_defs(cfg: ModelConfig, batch: int, cache_len: int) -> List[Dict[str, Any]]:
+    """Decode-cache structure mirroring the block structure (per position,
+    stacked over groups)."""
+    G = cfg.n_groups_scan
+    Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    d_in = cfg.d_inner if cfg.ssm_state else 0
+    N = cfg.ssm_groups * cfg.ssm_state
+    out = []
+    for mixer, _ in cfg.layer_plan():
+        if mixer == "attn":
+            out.append({"attn": {
+                "k": ParamDef((G, batch, cache_len, Hkv, dh),
+                              ("layers", "batch", "cache_seq", None, None)),
+                "v": ParamDef((G, batch, cache_len, Hkv, dh),
+                              ("layers", "batch", "cache_seq", None, None)),
+            }})
+        else:
+            out.append({"ssm": {
+                "state": ParamDef((G, batch, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                                  ("layers", "batch", "ssm_heads", None, None)),
+                "conv": ParamDef((G, batch, cfg.conv_width - 1, d_in + 2 * N),
+                                 ("layers", "batch", None, None)),
+            }})
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int, env=None):
+    def mk(name: str):
+        def inner(d: ParamDef):
+            # SSM recurrent state accumulates in f32; K/V + conv caches are
+            # model dtype.  Keyed by name — NEVER by shape (head_dim can
+            # coincide with ssm_state, e.g. both 128 in jamba).
+            dtype = jnp.float32 if name == "state" else cfg.jdtype
+            sharding = env.sharding_for(d.shape, d.axes) if env else None
+            return jax.ShapeDtypeStruct(d.shape, dtype, sharding=sharding)
+        return inner
+
+    tree = []
+    for c in cache_defs(cfg, batch, cache_len):
+        tree.append({mix: {name: mk(name)(d) for name, d in sub.items()}
+                     for mix, sub in c.items()})
+    if cfg.family == "encdec":
+        G = cfg.n_groups_scan
+        enc_len = cross_len(cfg, cache_len)
+        sh = ((G, batch, enc_len, cfg.n_kv_heads, cfg.head_dim),
+              ("layers", "batch", None, None, None))
+        mkx = lambda: jax.ShapeDtypeStruct(
+            sh[0], cfg.jdtype,
+            sharding=env.sharding_for(*sh) if env else None)
+        tree.append({"cross": {"k": mkx(), "v": mkx()}})
+    return tree
+
+
+def zero_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, cache_len))
+
+
+def cross_len(cfg: ModelConfig, cache_len: int) -> int:
+    """Encoder context length for decode (whisper 30 s ≈ 1500 frames stub)."""
+    return min(1500, cache_len)
+
+
+# ------------------------------------------------------------------- forward
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if cfg.remat == "dots_nb":
+        # save weight-like dot outputs (MLP/projections) but recompute the
+        # batched attention-score dots — the sweet spot once S² tensors
+        # dominate traffic but weight-dot outputs fit in HBM
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _apply_block(cfg, pos_idx, bp, x, mode, cache, pos, aux):
+    mixer_key = "attn" if "attn" in bp else "ssm"
+    new_cache = {}
+    if mixer_key == "attn":
+        c = cache.get("attn") if cache else None
+        x, nc = attention(bp["attn"], x, cfg, causal=True, mode=mode,
+                          cache=c, pos=pos)
+        if nc is not None:
+            new_cache["attn"] = nc
+    else:
+        c = cache.get("ssm") if cache else None
+        x, nc = ssm_block(bp["ssm"], x, cfg, mode=mode, cache=c)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    if "mlp" in bp:
+        x = mlp(bp["mlp"], x, cfg)
+    elif "moe" in bp:
+        moe_fn = moe_shard_map if cfg.moe_impl == "shard_map" else moe
+        x, a = moe_fn(bp["moe"], x, cfg)
+        aux = aux + a
+    if cfg.seq_parallel and mode in ("train", "prefill") and x.shape[1] > 1:
+        x = constrain(x, "batch", "seq_sp", None)
+    else:
+        x = constrain(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+def forward_blocks(cfg: ModelConfig, blocks, x, *, mode: str,
+                   caches=None, pos=None):
+    """Scan the stacked block groups.  Returns (x, new_caches, aux_loss).
+
+    - train: no caches in or out.
+    - prefill: no caches in; per-group caches emitted as scan outputs.
+    - decode: caches in (scanned as xs) and out (scanned as ys).
+    """
+    plan = cfg.layer_plan()
+    policy = _remat_policy(cfg)
+
+    if caches is None:
+        emit = mode == "prefill"
+
+        def body(carry, bps):
+            x, aux = carry
+            new_cs = []
+            for i in range(len(plan)):
+                x, nc, aux = _apply_block(cfg, i, bps[i], x, mode, None, pos, aux)
+                new_cs.append(nc)
+            return (x, aux), (new_cs if emit else None)
+
+        if policy is not None:
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+        return x, (ys if emit else None), aux
+
+    def body(carry, xs):
+        x, aux = carry
+        bps, cs = xs
+        new_cs = []
+        for i in range(len(plan)):
+            x, nc, aux = _apply_block(cfg, i, bps[i], x, mode, cs[i], pos, aux)
+            new_cs.append(nc)
+        return (x, aux), new_cs
+
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        (blocks, caches))
+    return x, new_caches, aux
+
+
+def _logits(cfg: ModelConfig, params, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits
+
+
+def _mask_padded_vocab(cfg: ModelConfig, logits):
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    v = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
+    return jnp.where(v < cfg.vocab_size, logits, -1e30)
+
+
+# ------------------------------------------------------------------ encoders
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over pre-embedded frames (conv frontend stub)."""
+    x = frames + params["pos_embed"][: frames.shape[1]][None]
+
+    def group(carry, bps):
+        x, aux = carry
+        x, _ = attention(bps[0]["attn"], x, cfg, causal=False, mode="train")
+        x = mlp(bps[0]["mlp"], x, cfg)
+        return (x, aux), None
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        group = jax.checkpoint(group, policy=policy)
+    (x, _), _ = jax.lax.scan(group, (x, jnp.zeros((), jnp.float32)),
+                             params["enc_blocks"])
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_with_cross(cfg, params, x, enc_out, *, mode, caches=None, pos=None):
+    """Decoder scan with interleaved cross-attention (enc-dec family)."""
+    plan = cfg.layer_plan()
+    use_cache = caches is not None
+    self_caches = caches[:-1] if use_cache else None
+    cross_cache = caches[-1]["cross"] if use_cache else None
+
+    def group(carry, xs):
+        x, aux = carry
+        if use_cache:
+            bps, cbp, cs, xc = xs
+        else:
+            bps, cbp = xs
+            cs, xc = None, None
+        new_cs = []
+        for i in range(len(plan)):
+            c = cs[i] if use_cache else None
+            x, nc, aux = _apply_block(cfg, i, bps[i], x, mode, c, pos, aux)
+            # cross-attention after self-attention
+            if mode == "decode":
+                x, _ = attention(cbp, x, cfg, mode="decode", cache=xc,
+                                 pos=pos, is_cross=True)
+            else:
+                x, nxc = attention(cbp, x, cfg, mode=mode, kv_x=enc_out)
+                if mode == "prefill":
+                    nc = dict(nc)
+                    nc["_cross"] = nxc
+            new_cs.append(nc)
+        return (x, aux), new_cs
+
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        group = jax.checkpoint(group, policy=policy)
+    xs = (params["blocks"], params["cross_blocks"][0]["attn"])
+    if use_cache:
+        xs = xs + (self_caches, cross_cache)
+        # scan over groups: cross_blocks stacked over G as well
+    (x, aux), new_caches = jax.lax.scan(group, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux
+
+
+def _pad_attn_caches(caches, max_len: Optional[int]):
+    """Pad attention K/V caches' sequence axis with decode headroom.
+
+    Cache leaves are (G, B, S, Hkv, dh); cross caches keep encoder length."""
+    if caches is None:
+        return None
+    out = []
+    for c in caches:
+        if "attn" in c:
+            k, v = c["attn"]["k"], c["attn"]["v"]
+            tgt = max_len if max_len is not None else 2 * k.shape[2]
+            pad = max(0, tgt - k.shape[2])
+            padw = ((0, 0),) * 2 + ((0, pad),) + ((0, 0),) * 2
+            c = dict(c)
+            c["attn"] = {"k": jnp.pad(k, padw), "v": jnp.pad(v, padw)}
+        out.append(c)
+    return out
+
+
+# ------------------------------------------------------------------ the API
+class Model:
+    """Bundled callables for one architecture."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- train
+    def train_logits(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = constrain(x, "batch", None, None)
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+        if cfg.family == "encdec":
+            enc = _encode(cfg, params, batch["frames"].astype(x.dtype))
+            x = x + params["pos_embed"][: x.shape[1]][None]
+            x, _, aux = _decoder_with_cross(cfg, params, x, enc, mode="train")
+        else:
+            x, _, aux = forward_blocks(cfg, params["blocks"], x, mode="train")
+        return _logits(cfg, params, x), aux
+
+    def loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        logits, aux = self.train_logits(params, batch)
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            P = cfg.n_prefix_embeds
+            logits = logits[:, P - 1:-1] if P > 0 else logits[:, :-1]
+            targets = tokens
+        else:
+            logits, targets = logits[:, :-1], tokens[:, 1:]
+        logits = _mask_padded_vocab(cfg, logits.astype(jnp.float32))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+        return ce + aux
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Full-sequence forward producing last-token logits + caches.
+
+        ``max_len`` pads attention KV caches with headroom for subsequent
+        decode steps (defaults to 2× the prompt length)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+        if cfg.family == "encdec":
+            enc = _encode(cfg, params, batch["frames"].astype(x.dtype))
+            x = x + params["pos_embed"][: x.shape[1]][None]
+            x, caches, _ = _decoder_with_cross(cfg, params, x, enc, mode="prefill")
+            # split the per-block "_cross" cache out into the trailing slot
+            cross = {"cross": {"k": caches[0]["_cross"]["k"],
+                               "v": caches[0]["_cross"]["v"]}} \
+                if "_cross" in caches[0] else None
+            self_caches = [{k: v for k, v in c.items() if k != "_cross"}
+                           for c in caches]
+            if cross is not None:
+                self_caches.append(cross)
+            caches = self_caches
+        else:
+            x, caches, _ = forward_blocks(cfg, params["blocks"], x,
+                                          mode="prefill", caches=None,
+                                          pos=None)
+        caches = _pad_attn_caches(caches, max_len)
+        logits = _logits(cfg, params, x[:, -1:])
+        return _mask_padded_vocab(cfg, logits), caches
+
+    # --------------------------------------------------------------- decode
+    def decode_step(self, params, caches, tokens, pos):
+        """One decode step: tokens (B, 1) at absolute position ``pos``."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = constrain(x, "batch", None, None)
+        if cfg.family == "encdec":
+            enc_out = None  # cross K/V precomputed in cache
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], pos, 1)[None]
+            x, new_caches, _ = _decoder_with_cross(
+                cfg, params, x, enc_out, mode="decode", caches=caches, pos=pos)
+            new_caches = list(new_caches) + [caches[-1]]
+        else:
+            x, new_caches, _ = forward_blocks(cfg, params["blocks"], x,
+                                              mode="decode", caches=caches,
+                                              pos=pos)
+        logits = _mask_padded_vocab(cfg, _logits(cfg, params, x))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,47 @@
+"""Batched serving engine: prefill + jitted greedy decode loop.
+
+The decode loop runs as a single jitted ``lax.scan`` over steps (one dispatch
+per generation call, not per token), with caches donated between steps — the
+pattern a production server uses per wave of a continuous-batching scheduler.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import Model, build_model
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 4096):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(self.model.prefill, max_len=max_len))
+        self._gen = jax.jit(self._generate_scan, static_argnames=("steps",))
+
+    def _generate_scan(self, params, caches, first_tok, start_pos, *, steps):
+        def step(carry, _):
+            tok, pos, caches = carry
+            nxt, caches = self.model.decode_step(params, caches, tok, pos)
+            return (nxt[:, None], pos + 1, caches), nxt
+
+        (_, _, caches), toks = jax.lax.scan(
+            step, (first_tok, start_pos, caches), None, length=steps)
+        return jnp.moveaxis(toks, 0, 1), caches     # (B, steps)
+
+    def generate(self, batch: Dict[str, jax.Array], steps: int):
+        """Greedy-decode ``steps`` tokens after the prompt."""
+        prompt_len = batch["tokens"].shape[1]
+        assert prompt_len + steps <= self.max_len, "exceeds cache capacity"
+        logits, caches = self._prefill(self.params, batch)
+        first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        toks, caches = self._gen(self.params, caches, first,
+                                 jnp.int32(prompt_len), steps=steps - 1)
+        return jnp.concatenate([first, toks], axis=1)

@@ -1,0 +1,138 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Every parameter/activation dimension carries a *logical* axis name; rules map
+it to zero or more mesh axes.  ``spec_for`` drops any assignment that does not
+divide the dimension evenly (e.g. 15 attention heads over a 16-way model
+axis), falling back to replication for that dim — this keeps one rule set
+valid across all 10 architectures.
+
+A context-managed ``MeshEnv`` carries (mesh, rules) so model code can request
+activation sharding constraints without threading mesh plumbing everywhere;
+outside any env (unit tests, single device) constraints are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+
+# Default logical→mesh rules.  "fsdp" axes shard weight rows (ZeRO-3 style);
+# "tp" shards heads/hidden/vocab/experts; "dp" shards batch.  The pod axis
+# folds into both dp and fsdp when present.
+def default_rules(mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    names = mesh.axis_names
+    dp: Tuple[str, ...] = tuple(n for n in ("pod", "data") if n in names)
+    tp: Tuple[str, ...] = ("model",) if "model" in names else ()
+    return {
+        "batch": dp,
+        "fsdp": dp,
+        "embed": dp,            # weight reduction dims → FSDP
+        "vocab": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "head_dim": (),
+        "mlp": tp,
+        "experts": tp,
+        "expert_mlp": (),
+        "ssm_heads": tp,
+        "ssm_proj": tp,
+        "layers": (),
+        "seq": (),
+        "cache_seq": tp,        # decode: shard KV cache sequence (flash-decode)
+        "state": (),
+        "conv": (),
+        "capacity": dp,         # MoE dispatch buffer capacity dim
+        "act_embed": (),        # activation hidden dim (replicated, 1D TP)
+        "act_heads": tp,        # activation head dim
+        "attn_batch": dp + tp,  # attention batch resharded over all axes
+        "seq_sp": tp,           # sequence-parallel residual stream
+    }
+
+
+@dataclass
+class MeshEnv:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+
+    def spec_for(self, shape: Sequence[int], axes: Axes) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        used: set = set()
+        parts = []
+        for dim, ax in zip(shape, axes):
+            if ax is None:
+                parts.append(None)
+                continue
+            mesh_axes = tuple(a for a in self.rules.get(ax, ())
+                              if a in self.mesh.axis_names and a not in used)
+            size = math.prod(self.mesh.shape[a] for a in mesh_axes) if mesh_axes else 1
+            if mesh_axes and size > 0 and dim % size == 0:
+                parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+                used.update(mesh_axes)
+            else:
+                parts.append(None)     # indivisible → replicate this dim
+        return P(*parts)
+
+    def sharding_for(self, shape: Sequence[int], axes: Axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+
+def dp_only_rules(mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    """Pure data-parallel profile: batch over every mesh axis, FSDP weights
+    over the data axes, no tensor parallelism.  The right regime for models
+    whose per-layer shards would be tiny or whose head counts don't divide
+    the TP width (e.g. smollm-360m) — avoids all activation resharding."""
+    names = mesh.axis_names
+    all_axes = tuple(n for n in ("pod", "data", "model") if n in names)
+    dp = tuple(n for n in ("pod", "data") if n in names)
+    base = default_rules(mesh)
+    base.update({
+        "batch": all_axes,
+        "fsdp": dp,
+        "embed": dp,
+        "vocab": (), "heads": (), "kv_heads": (), "mlp": (),
+        "experts": (), "ssm_heads": (), "ssm_proj": (),
+        "act_heads": (), "attn_batch": all_axes,
+        "capacity": all_axes,
+    })
+    return base
+
+
+def rules_for(cfg, mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    profile = getattr(cfg, "sharding_profile", "default")
+    if profile == "dp_only":
+        return dp_only_rules(mesh)
+    return default_rules(mesh)
+
+
+_CURRENT: list = []
+
+
+@contextlib.contextmanager
+def mesh_env(mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    env = MeshEnv(mesh=mesh, rules={**default_rules(mesh), **(rules or {})})
+    _CURRENT.append(env)
+    try:
+        with mesh:
+            yield env
+    finally:
+        _CURRENT.pop()
+
+
+def current_env() -> Optional[MeshEnv]:
+    return _CURRENT[-1] if _CURRENT else None
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Activation sharding constraint by logical axes; no-op without a mesh."""
+    env = current_env()
+    if env is None:
+        return x
+    spec = env.spec_for(x.shape, tuple(axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(env.mesh, spec))

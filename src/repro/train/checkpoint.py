@@ -1,0 +1,182 @@
+"""RStore-backed versioned checkpointing — the paper's store as the
+framework's artifact layer.
+
+Every checkpoint commit is an RStore *version*; every tensor block is a keyed
+*record* (primary key = stable hash of ``(tensor_path, block_idx)``).  Blocks
+whose bytes did not change since the parent version dedupe automatically
+(frozen layers, EMA snapshots, skipped-update schedules); branched experiment
+forks form the version DAG.  Queries map onto training operations:
+
+  Q1 full version retrieval   → restore(version)
+  Q2 range retrieval          → partial restore (elastic rescale: only the
+                                key range a new mesh shard needs)
+  Q3 record evolution         → per-tensor training forensics
+
+The commit path is asynchronous-friendly: deltas land in RStore's delta store
+(host) and are chunked per batch off the training step's critical path (§4).
+"""
+from __future__ import annotations
+
+import hashlib
+import struct
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import RStore, RStoreConfig
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _block_key(tensor_path: str, block_idx: int) -> int:
+    h = hashlib.blake2b(f"{tensor_path}#{block_idx}".encode(),
+                        digest_size=4).digest()
+    return int.from_bytes(h, "big") & 0x7FFFFFFF
+
+
+@dataclass
+class TensorMeta:
+    path: str
+    shape: Tuple[int, ...]
+    dtype: str
+    n_blocks: int
+    block_keys: List[int]
+
+
+class VersionedCheckpointer:
+    """Commit/restore pytree states through an RStore instance."""
+
+    def __init__(self, store: Optional[RStore] = None,
+                 block_bytes: int = 1 << 20,
+                 rstore_config: Optional[RStoreConfig] = None) -> None:
+        self.block_bytes = int(block_bytes)
+        self.rs = store or RStore(rstore_config or RStoreConfig(
+            algorithm="bottom_up", capacity=4 << 20, batch_size=8,
+            store_payloads=True))
+        self.meta: Dict[int, Dict[str, TensorMeta]] = {}   # version -> metas
+        self._key_to_block: Dict[int, Tuple[str, int]] = {}
+        self._root: Optional[int] = None
+
+    # -------------------------------------------------------------- commits
+    def _blocks_of(self, path: str, arr: np.ndarray):
+        raw = np.ascontiguousarray(arr).tobytes()
+        n = max(1, (len(raw) + self.block_bytes - 1) // self.block_bytes)
+        for i in range(n):
+            yield i, raw[i * self.block_bytes:(i + 1) * self.block_bytes]
+
+    def commit(self, state, parents: Sequence[int] = (),
+               tag: str = "") -> int:
+        """Commit a pytree as a new version derived from ``parents``.
+
+        Only blocks whose bytes differ from the first parent are written —
+        the delta the paper's ingest path expects."""
+        flat = jax.tree_util.tree_flatten_with_path(state)[0]
+        metas: Dict[str, TensorMeta] = {}
+        adds: Dict[int, bytes] = {}
+        all_keys: set = set()
+        parent_meta = self.meta.get(parents[0]) if parents else None
+        parent_payload: Dict[int, bytes] = {}
+        if parents:
+            # compare against the parent's live records
+            pm = self.rs._key_map(parents[0])
+            store = self.rs.graph.store
+            parent_payload = {pk: store.payload(rid) for pk, rid in pm.items()}
+
+        for path, leaf in flat:
+            pstr = _path_str(path)
+            arr = np.asarray(leaf)
+            keys = []
+            for bi, blob in self._blocks_of(pstr, arr):
+                pk = _block_key(pstr, bi)
+                if pk in all_keys or (pk in self._key_to_block and
+                                      self._key_to_block[pk] != (pstr, bi)):
+                    raise RuntimeError(f"block key collision for {pstr}#{bi}")
+                all_keys.add(pk)
+                self._key_to_block[pk] = (pstr, bi)
+                keys.append(pk)
+                if parent_payload.get(pk) != blob:
+                    adds[pk] = blob
+            metas[pstr] = TensorMeta(pstr, tuple(arr.shape), str(arr.dtype),
+                                     len(keys), keys)
+
+        if not parents:
+            vid = self.rs.init_root(adds)
+        else:
+            dels = [pk for pk in parent_payload if pk not in all_keys]
+            vid = self.rs.commit(list(parents), adds=adds, dels=dels)
+        self.meta[vid] = metas
+        if self._root is None:
+            self._root = vid
+        return vid
+
+    # -------------------------------------------------------------- restore
+    def restore(self, vid: int, like=None):
+        """Q1: full version retrieval → pytree."""
+        records, _ = self.rs.get_version(vid)
+        return self._assemble(vid, records, like)
+
+    def restore_tensors(self, vid: int, prefixes: Sequence[str]):
+        """Q2-flavoured partial restore: only tensors matching prefixes.
+
+        Issues one range/multi-key retrieval per tensor (contiguous block
+        keys are hashed, so we go through the key index per block)."""
+        metas = self.meta[vid]
+        out: Dict[str, np.ndarray] = {}
+        for pstr, tm in metas.items():
+            if not any(pstr.startswith(p) for p in prefixes):
+                continue
+            blobs = []
+            for pk in tm.block_keys:
+                rec, _ = self.rs.get_record(vid, pk)
+                assert rec is not None, f"missing block {pstr}"
+                blobs.append(rec)
+            out[pstr] = self._tensor_from(tm, blobs)
+        return out
+
+    def evolution(self, tensor_path: str, block_idx: int = 0):
+        """Q3: every distinct value a block ever had (origin order)."""
+        pk = _block_key(tensor_path, block_idx)
+        evo, _ = self.rs.get_evolution(pk)
+        return evo
+
+    # ------------------------------------------------------------- plumbing
+    def _tensor_from(self, tm: TensorMeta, blobs: List[bytes]) -> np.ndarray:
+        raw = b"".join(blobs)
+        return np.frombuffer(raw, dtype=np.dtype(tm.dtype)).reshape(tm.shape).copy()
+
+    def _assemble(self, vid: int, records: Dict[int, bytes], like):
+        metas = self.meta[vid]
+        tensors = {}
+        for pstr, tm in metas.items():
+            blobs = [records[pk] for pk in tm.block_keys]
+            tensors[pstr] = self._tensor_from(tm, blobs)
+        if like is None:
+            return tensors
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat:
+            arr = tensors[_path_str(path)]
+            leaves.append(jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves)
+
+    def latest(self) -> Optional[int]:
+        vs = self.rs.graph.versions
+        return vs[-1] if vs else None
+
+    def storage_stats(self):
+        return self.rs.storage_stats()

@@ -1,0 +1,60 @@
+"""Elastic restart: restore a checkpoint onto a *different* mesh.
+
+RStore's chunk layout is mesh-independent (records are keyed by logical
+tensor block, not by device), so growing/shrinking the cluster is: build the
+new mesh → re-lower the train step under the new sharding rules → restore the
+latest version and ``device_put`` each tensor with its new NamedSharding.
+Partial restore (Q2) lets a data-parallel-only rescale fetch just the blocks
+the new topology is missing, though the default path restores everything.
+
+Failure handling contract (launch/train.py):
+  - commits are atomic at RStore index publish; a crash mid-commit leaves the
+    previous version intact;
+  - on restart the driver calls ``restore_for_mesh`` with whatever devices
+    are healthy; the deterministic data pipeline skips ahead to the stored
+    step, so no samples repeat.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.model import param_defs
+from ..models.layers import ParamDef, tree_pspecs
+from ..sharding.rules import MeshEnv, default_rules, mesh_env
+from .checkpoint import VersionedCheckpointer
+from .optimizer import Optimizer
+
+
+def shard_state_for_mesh(state_host, cfg: ModelConfig, opt: Optimizer,
+                         mesh) -> dict:
+    """device_put a host state pytree with shardings derived for ``mesh``."""
+    env = MeshEnv(mesh=mesh, rules=default_rules(mesh))
+    defs = param_defs(cfg)
+    pspecs = {
+        "params": tree_pspecs(defs, env),
+        "opt": jax.tree.map(lambda s: env.sharding_for(s.shape, getattr(s, "axes", (None,) * len(s.shape)))
+                            if hasattr(s, "shape") else None,
+                            opt.abstract_state(defs, env)),
+    }
+
+    def put(x, sh):
+        try:
+            return jax.device_put(x, sh)
+        except Exception:
+            return jax.device_put(x)   # replicate anything unshardable
+
+    return {
+        "params": jax.tree.map(put, state_host["params"], pspecs["params"]),
+        "opt": jax.tree.map(lambda x: jax.device_put(x), state_host["opt"]),
+    }
+
+
+def restore_for_mesh(ckpt: VersionedCheckpointer, version: int, like_state,
+                     cfg: ModelConfig, opt: Optimizer, mesh):
+    """Q1 restore + reshard onto a (possibly different) mesh."""
+    host_state = ckpt.restore(version, like=like_state)
+    return shard_state_for_mesh(host_state, cfg, opt, mesh)

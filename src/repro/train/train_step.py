@@ -1,0 +1,46 @@
+"""The jitted train step: loss → grads → optimizer update.
+
+State is a plain pytree {"params", "opt"} so jit donation, sharding and the
+RStore checkpoint manager all treat it uniformly.  The same builder serves
+real training (examples/launch) and the dry-run (abstract lowering).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import Model, abstract_params, build_model, init_params, param_defs
+from .optimizer import Optimizer, make_optimizer
+
+
+def make_train_step(model: Model, opt: Optimizer):
+    def train_step(state, batch):
+        def loss_fn(params):
+            return model.loss(params, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        new_params, new_opt = opt.update(grads, state["opt"], state["params"])
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(cfg: ModelConfig, opt: Optimizer, key):
+    params = init_params(cfg, key)
+    return {"params": params, "opt": opt.init(params)}
+
+
+def abstract_state(cfg: ModelConfig, opt: Optimizer, env=None):
+    """ShapeDtypeStruct state (with shardings) for AOT lowering."""
+    defs = param_defs(cfg)
+    return {
+        "params": abstract_params(cfg, env),
+        "opt": opt.abstract_state(defs, env),
+    }

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# 8 host devices: enough for sharding/shard_map tests, cheap enough for the
+# rest (the 512-device platform is reserved for launch/dryrun.py)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

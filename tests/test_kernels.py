@@ -1,0 +1,114 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes, plus hypothesis property tests on the wrappers."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import bitmap as kbitmap
+from repro.kernels import deltaenc as kdelta
+from repro.kernels import minhash as kminhash
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------------ minhash
+@pytest.mark.parametrize("R,D", [(128, 128), (256, 128), (128, 384), (512, 256)])
+@pytest.mark.parametrize("L", [1, 4, 16])
+def test_minhash_kernel_matches_ref(R, D, L):
+    rng = np.random.default_rng(R * 1000 + D + L)
+    vers = rng.integers(0, 10_000, size=(R, D)).astype(np.int32)
+    vers[rng.random((R, D)) < 0.4] = -1
+    a, b = ops.hash_family(L, seed=7)
+    got = kminhash.minhash(jnp.asarray(vers), jnp.asarray(a), jnp.asarray(b),
+                           interpret=True)
+    want = ref.minhash_ref(jnp.asarray(vers), jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_minhash_empty_rows_are_maxval():
+    vers = np.full((128, 128), -1, dtype=np.int32)
+    a, b = ops.hash_family(3)
+    out = ops.minhash_padded(vers, a, b)
+    assert (out == 0xFFFFFFFF).all()
+
+
+def test_minhash_is_permutation_invariant():
+    """Min-hash of a set cannot depend on element order (the property the
+    partitioner relies on)."""
+    rng = np.random.default_rng(0)
+    row = rng.choice(5000, size=60, replace=False).astype(np.int32)
+    a, b = ops.hash_family(8, 3)
+    m1 = ops.minhash_padded(row[None, :], a, b)
+    m2 = ops.minhash_padded(rng.permutation(row)[None, :], a, b)
+    np.testing.assert_array_equal(m1, m2)
+
+
+@given(st.lists(st.lists(st.integers(0, 2**20), min_size=0, max_size=40),
+                min_size=1, max_size=20))
+@settings(max_examples=25, deadline=None)
+def test_minhash_csr_equals_python_min(rows):
+    indptr = np.cumsum([0] + [len(r) for r in rows]).astype(np.int64)
+    col = np.asarray([v for r in rows for v in r], dtype=np.int64)
+    a, b = ops.hash_family(4, 1)
+    got = ops.minhash_csr(indptr, col, a, b)
+    for i, r in enumerate(rows):
+        for l in range(4):
+            if not r:
+                assert got[i, l] == 0xFFFFFFFF
+            else:
+                want = min(((int(a[l]) * v + int(b[l])) & 0xFFFFFFFF) for v in set(r))
+                assert got[i, l] == want
+
+
+# ---------------------------------------------------------------- xor delta
+@pytest.mark.parametrize("N,W", [(128, 128), (256, 256), (384, 512)])
+def test_xor_delta_kernel_matches_ref(N, W):
+    rng = np.random.default_rng(N + W)
+    p = rng.integers(0, 2**32, size=(N, W), dtype=np.uint32)
+    c = rng.integers(0, 2**32, size=(N, W), dtype=np.uint32)
+    d, cnt = kdelta.xor_delta(jnp.asarray(p), jnp.asarray(c), interpret=True)
+    dr, cr = ref.xor_delta_ref(jnp.asarray(p), jnp.asarray(c))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cr))
+
+
+@given(st.binary(min_size=0, max_size=300), st.binary(min_size=0, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_xor_delta_bytes_roundtrip(parent, child):
+    """decode(parent, encode(parent, child)) == child — the §3.4 invariant."""
+    w = max(len(parent), len(child))
+    delta, _ = ops.xor_delta_bytes(parent.ljust(w, b"\0"), child.ljust(w, b"\0"))
+    back, _ = ops.xor_delta_bytes(parent.ljust(w, b"\0"), delta)
+    assert back[:len(child)] == child
+    assert all(x == 0 for x in back[len(child):])
+
+
+def test_xor_delta_identical_is_zero():
+    p = np.arange(256 * 128, dtype=np.uint32).reshape(256, 128)
+    d, cnt = ops.xor_delta_batch(p, p)
+    assert (d == 0).all() and (cnt == 0).all()
+
+
+# ------------------------------------------------------------------- bitmap
+@pytest.mark.parametrize("N,W", [(128, 128), (256, 256)])
+def test_bitmap_kernel_matches_ref(N, W):
+    rng = np.random.default_rng(N * 7 + W)
+    bms = rng.integers(0, 2**32, size=(N, W), dtype=np.uint32)
+    row = rng.integers(0, 2**32, size=(1, W), dtype=np.uint32)
+    a1, c1 = kbitmap.and_popcount(jnp.asarray(bms), jnp.asarray(row), interpret=True)
+    a2, c2 = ref.and_popcount_ref(jnp.asarray(bms), jnp.asarray(row))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@given(st.integers(1, 64), st.integers(1, 33), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_bitmap_popcount_exact(n, w, seed):
+    rng = np.random.default_rng(seed)
+    bms = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    row = rng.integers(0, 2**32, size=w, dtype=np.uint32)
+    anded, cnt = ops.and_popcount_batch(bms, row)
+    want = np.array([sum(bin(int(x)).count("1") for x in r) for r in bms & row])
+    np.testing.assert_array_equal(anded, bms & row)
+    np.testing.assert_array_equal(cnt, want)

@@ -1,0 +1,173 @@
+"""Tests for the §Perf beyond-paper features: shard_map MoE equivalence,
+sharding profiles/rules, custom-VJP rmsnorm gradients, and the HLO analyzer
+(trip-count multiplication + slice-aware byte model)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import config as mcfg
+from repro.models import layers as L
+from repro.sharding.rules import default_rules, dp_only_rules, mesh_env
+
+
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    if np.prod(shape) > jax.device_count():
+        pytest.skip(f"needs {np.prod(shape)} devices")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _devices():
+    # tests in this module run on whatever devices exist; CI sets
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 via tests/conftest
+    return jax.devices()
+
+
+def test_moe_shard_map_matches_oracle():
+    cfg = ARCHS["granite-moe-1b-a400m"].reduced()
+    cfg = mcfg.ModelConfig(**{**cfg.__dict__, "capacity_factor": 8.0,
+                              "n_experts": 8})
+    mesh = _mesh()
+    p = L.tree_init(L.moe_defs(cfg, 1), jax.random.PRNGKey(0), jnp.float32)
+    p = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                          jnp.float32)
+    want, _ = L.moe(p, x, cfg)
+    with mesh_env(mesh):
+        got, _ = jax.jit(lambda p, x: L.moe_shard_map(p, x, cfg))(p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_shard_map_gradients_flow():
+    cfg = ARCHS["granite-moe-1b-a400m"].reduced()
+    cfg = mcfg.ModelConfig(**{**cfg.__dict__, "capacity_factor": 8.0,
+                              "n_experts": 8})
+    mesh = _mesh()
+    p = L.tree_init(L.moe_defs(cfg, 1), jax.random.PRNGKey(0), jnp.float32)
+    p = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                          jnp.float32)
+
+    def loss_sm(p, x):
+        with mesh_env(mesh):
+            y, aux = L.moe_shard_map(p, x, cfg)
+        return jnp.sum(y * y) + aux
+
+    def loss_ref(p, x):
+        y, aux = L.moe(p, x, cfg)
+        return jnp.sum(y * y) + aux
+
+    with mesh_env(mesh):
+        g_sm = jax.jit(jax.grad(loss_sm))(p, x)
+    g_ref = jax.grad(loss_ref)(p, x)
+    for a, b in zip(jax.tree.leaves(g_sm), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_rmsnorm_custom_vjp_matches_autodiff():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 32), jnp.float32)
+    s = jax.random.normal(jax.random.PRNGKey(1), (32,)) * 0.1 + 1.0
+
+    def f_custom(x, s):
+        return jnp.sum(jnp.sin(L.rmsnorm(x, s, 1e-5)))
+
+    def f_ref(x, s):
+        return jnp.sum(jnp.sin(L._rmsnorm_ref(x, s, 1e-5)))
+
+    gx1, gs1 = jax.grad(f_custom, argnums=(0, 1))(x, s)
+    gx2, gs2 = jax.grad(f_ref, argnums=(0, 1))(x, s)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gs1), np.asarray(gs2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rules_drop_indivisible_assignments():
+    mesh = _mesh((1, 4), ("data", "model"))
+    from repro.sharding.rules import MeshEnv
+    env = MeshEnv(mesh, default_rules(mesh))
+    # 15 heads over 4-way model axis: dropped → replicated
+    spec = env.spec_for((960, 15, 64), ("embed", "heads", "head_dim"))
+    assert spec[1] is None
+    # 16 heads: sharded
+    spec = env.spec_for((960, 16, 64), ("embed", "heads", "head_dim"))
+    assert spec[1] == "model"
+
+
+def test_dp_only_rules_use_all_axes_for_batch():
+    mesh = _mesh((2, 4), ("data", "model"))
+    rules = dp_only_rules(mesh)
+    assert rules["batch"] == ("data", "model")
+    assert rules["mlp"] == ()
+
+
+# ------------------------------------------------------------ hlo analyzer
+def test_hlo_analyzer_multiplies_scan_bodies():
+    from benchmarks.hlo_analysis import analyze_text
+
+    def scanned(a, ws):
+        def body(x, w):
+            return x @ w, None
+        return jax.lax.scan(body, a, ws)[0]
+
+    c = jax.jit(scanned).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)).compile()
+    costs = analyze_text(c.as_text())
+    want = 7 * 2 * 128 ** 3
+    assert abs(costs.flops - want) / want < 0.01
+    # XLA's own analysis undercounts (visits the body once) — the reason
+    # this analyzer exists
+    assert c.cost_analysis()["flops"] < costs.flops
+
+
+def test_hlo_analyzer_slice_aware_bytes():
+    from benchmarks.hlo_analysis import analyze_text
+
+    def scanned(a, ws):
+        def body(x, w):
+            return x @ w, None
+        return jax.lax.scan(body, a, ws)[0]
+
+    n = 50
+    c = jax.jit(scanned).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((n, 128, 128), jnp.float32)).compile()
+    costs = analyze_text(c.as_text())
+    # each iteration is charged ~a few tensor slices (weight r+w, dot out,
+    # carry copies ≈ 0.5 MB) — NOT the whole (n, 128, 128) stack (3.2 MB/iter
+    # at n=50, which the pre-fix model charged)
+    per_iter = costs.bytes / n
+    assert per_iter < 16 * 128 * 128 * 4
+    assert per_iter < n * 128 * 128 * 4 / 2
+
+
+def test_hlo_analyzer_collective_multiplicity():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from benchmarks.hlo_analysis import analyze_text
+    mesh = _mesh((4,), ("model",))
+
+    def body_fn(a, ws):
+        def body(x, w):
+            y = x @ w
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, P(None, None))), None
+        return jax.lax.scan(body, a, ws)[0]
+
+    c = jax.jit(body_fn).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32,
+                             sharding=NamedSharding(mesh, P(None, None))),
+        jax.ShapeDtypeStruct((5, 64, 64), jnp.float32,
+                             sharding=NamedSharding(mesh, P(None, None, "model")))
+    ).compile()
+    costs = analyze_text(c.as_text())
+    mults = [col.get("mult", 1) for col in costs.collectives]
+    assert any(m == 5 for m in mults)

@@ -1,0 +1,93 @@
+"""Property-based end-to-end test: for ANY random commit workload (branched
+parents, random add/modify/delete mixes, random batch sizes and algorithms),
+every query class returns exactly what the version-graph oracle says."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import RStore, RStoreConfig
+
+
+@st.composite
+def workload(draw):
+    n_commits = draw(st.integers(2, 8))
+    ops = []
+    for _ in range(n_commits):
+        ops.append({
+            "parent_choice": draw(st.integers(0, 10**6)),
+            "second_parent": draw(st.booleans()),
+            "mods": draw(st.lists(st.integers(0, 24), min_size=0, max_size=4)),
+            "inserts": draw(st.lists(st.integers(25, 40), min_size=0,
+                                     max_size=3)),
+            "dels": draw(st.lists(st.integers(0, 24), min_size=0, max_size=2)),
+        })
+    return {
+        "algorithm": draw(st.sampled_from(["bottom_up", "depth_first",
+                                           "shingle"])),
+        "k": draw(st.sampled_from([1, 3])),
+        "batch": draw(st.integers(1, 6)),
+        "capacity": draw(st.sampled_from([256, 1024, 4096])),
+        "ops": ops,
+        "seed": draw(st.integers(0, 2**31 - 1)),
+    }
+
+
+@given(workload())
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_random_workload_queries_exact(w):
+    rng = np.random.default_rng(w["seed"])
+
+    def pay():
+        return rng.integers(0, 256, int(rng.integers(16, 96)),
+                            dtype=np.uint8).tobytes()
+
+    rs = RStore(RStoreConfig(algorithm=w["algorithm"], capacity=w["capacity"],
+                             k=w["k"], batch_size=w["batch"]))
+    vids = [rs.init_root({pk: pay() for pk in range(12)})]
+
+    for op in w["ops"]:
+        parent = vids[op["parent_choice"] % len(vids)]
+        pmap_keys = set(
+            rs.graph.store.keys()[rs.graph.members(parent)].tolist())
+        adds = {pk: pay() for pk in set(op["mods"]) | set(op["inserts"])}
+        dels = [pk for pk in set(op["dels"])
+                if pk in pmap_keys and pk not in adds]
+        parents = [parent]
+        if op["second_parent"] and len(vids) > 1:
+            other = vids[(op["parent_choice"] // 7) % len(vids)]
+            if other != parent:
+                parents.append(other)
+        vids.append(rs.commit(parents, adds=adds, dels=dels))
+
+    keys_arr = rs.graph.store.keys()
+
+    # Q1 everywhere
+    for v in vids:
+        got, _ = rs.get_version(v)
+        m = rs.graph.members(v)
+        want = {int(keys_arr[r]): rs.graph.store.payload(int(r)) for r in m}
+        assert got == want
+
+    # Q-point / Q2 / Q3 on the last version
+    v = vids[-1]
+    m = rs.graph.members(v)
+    live = {int(keys_arr[r]): int(r) for r in m}
+    for pk in list(live)[:3]:
+        got, _ = rs.get_record(v, pk)
+        assert got == rs.graph.store.payload(live[pk])
+    got, _ = rs.get_record(v, 10_000)
+    assert got is None
+    rng_got, _ = rs.get_range(v, 5, 15)
+    assert rng_got == {pk: rs.graph.store.payload(r)
+                       for pk, r in live.items() if 5 <= pk <= 15}
+    some_key = next(iter(live)) if live else 0
+    evo, _ = rs.get_evolution(some_key)
+    origins = [o for o, _ in evo]
+    want_origins = sorted(
+        {int(rs.graph.store.origin_versions()[r])
+         for r in range(len(rs.graph.store))
+         if int(keys_arr[r]) == some_key},
+        key=lambda x: rs.graph.versions.index(x))
+    assert origins == want_origins
