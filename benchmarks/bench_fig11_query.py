@@ -5,6 +5,10 @@ random query workload, with the DELTA and SUBCHUNK baselines.
 Claims: BOTTOM-UP best for Q1/Q2; Q2 tracks Q1 (partial span ∝ full span);
 DELTA's Q2 ≥ its Q1 (it reconstructs then filters); larger sub-chunks help
 Q3; SUBCHUNK is best for Q3 and worst for Q1.
+
+Each workload wave runs through the plan/execute session API — the whole
+batch of N_QUERIES is planned together and fetched in one KVS round trip
+(see bench_batched_query.py for the round-trip comparison itself).
 """
 from __future__ import annotations
 
@@ -12,7 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core import DatasetSpec, RStore, RStoreConfig, generate
+from repro.core import DatasetSpec, Q, RStore, RStoreConfig, generate
 
 from .common import emit, save_json
 
@@ -46,18 +50,21 @@ def run():
         for k in (1, 5, 25):
             rs = _rstore_for(algo, k)
             vids, keys = _workload(rs, rng)
+            snap = rs.snapshot()          # session API: plan+execute batches
             t0 = time.perf_counter()
-            spans = [rs.get_version(int(v))[1].chunks_fetched for v in vids]
+            res1 = snap.execute([Q.version(int(v)) for v in vids])
             q1 = (time.perf_counter() - t0) / N_QUERIES
+            spans = [r.stats.chunks_fetched for r in res1]
             t0 = time.perf_counter()
-            for v in vids:
-                rs.get_range(int(v), 100, 200)
+            snap.execute([Q.range(int(v), 100, 200) for v in vids])
             q2 = (time.perf_counter() - t0) / N_QUERIES
             t0 = time.perf_counter()
-            kspans = [rs.get_evolution(int(kk))[1].chunks_fetched for kk in keys]
+            res3 = snap.execute([Q.evolution(int(kk)) for kk in keys])
             q3 = (time.perf_counter() - t0) / N_QUERIES
+            kspans = [r.stats.chunks_fetched for r in res3]
             out[f"{algo}_k{k}"] = {
                 "q1_s": q1, "q2_s": q2, "q3_s": q3,
+                "q1_round_trips": res1.batch.kvs_queries,
                 "avg_version_span": float(np.mean(spans)),
                 "avg_key_span": float(np.mean(kspans)),
             }

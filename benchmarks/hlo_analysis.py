@@ -321,6 +321,16 @@ class HloAnalyzer:
         return out
 
 
+def xla_cost_analysis(compiled) -> Dict:
+    """XLA's own per-module cost dict, normalized across jax versions
+    (newer jax returns one dict; older returns a list of per-computation
+    dicts — take the entry module's)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def analyze_text(hlo_text: str) -> Costs:
     return HloAnalyzer(hlo_text).analyze()
 

@@ -112,7 +112,7 @@ def analyze(compiled, cfg, shape_kind: str, seq: int, batch: int,
             n_chips: int) -> Roofline:
     hlo = compiled.as_text()
     costs = hlo_analysis.analyze_text(hlo)
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_analysis.xla_cost_analysis(compiled)
     counts = Counter()
     for c in costs.collectives:
         counts[c["kind"]] += c.get("mult", 1)

@@ -11,9 +11,10 @@ import time
 
 
 def main() -> None:
-    from . import (bench_chunksize, bench_fig8_span, bench_fig9_beta,
-                   bench_fig10_compression, bench_fig11_query,
-                   bench_fig12_scaling, bench_fig13_online, bench_table1)
+    from . import (bench_batched_query, bench_chunksize, bench_fig8_span,
+                   bench_fig9_beta, bench_fig10_compression,
+                   bench_fig11_query, bench_fig12_scaling, bench_fig13_online,
+                   bench_table1)
 
     suites = [
         ("table1_costmodel", bench_table1.run),
@@ -22,6 +23,7 @@ def main() -> None:
         ("fig9_beta", bench_fig9_beta.run),
         ("fig10_compression", bench_fig10_compression.run),
         ("fig11_query", bench_fig11_query.run),
+        ("batched_query", bench_batched_query.run),
         ("fig12_scaling", bench_fig12_scaling.run),
         ("fig13_online", bench_fig13_online.run),
     ]

@@ -8,7 +8,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import RStore, RStoreConfig
+from repro.core import Q, RStore, RStoreConfig
 
 rng = np.random.default_rng(0)
 
@@ -31,20 +31,29 @@ def main():
     v2 = rs.commit([v0], adds={50: doc("patient-50/new-enrollee")}, dels=[3])
     v3 = rs.commit([v1, v2], adds={8: doc("patient-8/merged-analysis")})
 
-    # -- Q1: full version retrieval ----------------------------------------
-    records, stats = rs.get_version(v3)
-    print(f"version {v3}: {len(records)} records via "
-          f"{stats.chunks_fetched} chunks, {stats.kvs_queries} KVS queries")
+    # -- session API: plan a wave of queries, execute in ONE round trip ----
+    snap = rs.snapshot()                       # immutable read view
+    res = snap.execute([
+        Q.version(v3),                         # Q1: full version
+        Q.record(v3, 7),                       # point lookup
+        Q.records(v3, [8, 50]),                # multi-point
+        Q.range(v3, 10, 19),                   # Q2: key range
+        Q.evolution(7),                        # Q3: record history
+    ])
+    records = res[0].value
+    print(f"version {v3}: {len(records)} records; whole 5-query session = "
+          f"{res.batch.kvs_queries} KVS round trip "
+          f"({res.batch.chunks_fetched} deduped chunks, "
+          f"{res.batch.bytes_fetched} bytes)")
+    print("patient 7 at v3:", res[1].value[:40], "...")
+    print("patients {8, 50}:", sorted(res[2].value))
+    print("range [10, 19]:", sorted(res[3].value))
+    print("evolution of patient 7:", [(v, p[:28]) for v, p in res[4].value])
 
-    # -- Q-point / Q2: record + range retrieval ----------------------------
-    rec, _ = rs.get_record(v3, 7)
-    print("patient 7 at v3:", rec[:40], "...")
-    rng_recs, _ = rs.get_range(v3, 10, 19)
-    print("range [10, 19]:", sorted(rng_recs))
-
-    # -- Q3: record evolution ----------------------------------------------
-    evo, _ = rs.get_evolution(7)
-    print("evolution of patient 7:", [(v, p[:28]) for v, p in evo])
+    # -- per-query wrappers (single-query sessions) still work -------------
+    rec, stats = rs.get_record(v3, 7)
+    print(f"wrapper get_record: {stats.kvs_queries} round trip, "
+          f"{stats.chunks_fetched} chunk(s)")
 
     # -- storage ------------------------------------------------------------
     print("storage:", rs.storage_stats())

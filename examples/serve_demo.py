@@ -1,6 +1,12 @@
 """Batched serving demo: prefill + jitted greedy decode over a reduced arch,
 with a versioned model registry (serve the model at any RStore version).
 
+Model restores ride the plan/execute session API: a full restore is a
+one-query session (Q1) and a partial restore batches one ``Q.records`` query
+per tensor — either way the registry pays a single KVS round trip, which is
+what lets a serving fleet hot-swap model versions without hammering the
+backing store.
+
 Run:  PYTHONPATH=src python examples/serve_demo.py [--arch granite-moe-1b-a400m]
 """
 import argparse
@@ -47,8 +53,12 @@ def main():
 
     prompts = {"tokens": synthetic_batch(cfg, 0, args.batch,
                                          args.prompt_len)["tokens"]}
+    kvs_stats = ckpt.rs.kvs.stats
     for version in (v0, v1):
+        q0 = kvs_stats.n_queries
         params = ckpt.restore(version, like=state)["params"]
+        print(f"restore@v{version}: {kvs_stats.n_queries - q0} KVS round "
+              f"trip(s) (batched session)")
         eng = Engine(cfg, params, max_len=args.prompt_len + args.gen + 8)
         t0 = time.time()
         toks = eng.generate(prompts, steps=args.gen)
@@ -56,6 +66,13 @@ def main():
         tps = args.batch * args.gen / dt
         print(f"model@v{version}: generated {toks.shape} in {dt:.2f}s "
               f"({tps:.1f} tok/s) — first row: {np.asarray(toks[0])[:8]}")
+
+    # partial restore (elastic rescale): every embedding tensor in one
+    # multi-point session — one KVS round trip regardless of tensor count
+    q0 = kvs_stats.n_queries
+    partial = ckpt.restore_tensors(v1, prefixes=("params",))
+    print(f"partial restore of {len(partial)} tensors: "
+          f"{kvs_stats.n_queries - q0} KVS round trip(s)")
 
 
 if __name__ == "__main__":

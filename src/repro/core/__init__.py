@@ -1,5 +1,6 @@
 """RStore core: the paper's contribution — a multi-version document store
 layered over a distributed key-value store."""
+from .api import (BatchResult, Q, Query, QueryResult, QueryStats, Snapshot)
 from .datagen import PAPER_DATASETS, DatasetSpec, dataset_stats, generate
 from .ingest import RStore, RStoreConfig
 from .types import Chunk, CompositeKey, Delta, Partitioning, Record
@@ -9,4 +10,5 @@ __all__ = [
     "RStore", "RStoreConfig", "VersionGraph", "RecordStore", "DeltaIds",
     "CompositeKey", "Record", "Delta", "Chunk", "Partitioning",
     "DatasetSpec", "PAPER_DATASETS", "generate", "dataset_stats",
+    "Q", "Query", "QueryResult", "QueryStats", "BatchResult", "Snapshot",
 ]

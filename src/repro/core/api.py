@@ -1,0 +1,332 @@
+"""Plan/execute query engine: batched multi-query sessions over snapshots.
+
+RStore's core insight (§2.3–§2.4) is that few large batched fetches beat many
+small ones.  The seed API executed one query at a time, each paying two KVS
+round trips (chunks, then maps).  This module turns retrieval into a
+plan/execute pipeline over an immutable read view, in the spirit of the
+query/update separation of versioned external-memory dictionaries
+(Byde & Twigg):
+
+1. **Plan** — every query's candidate chunk set is computed in one vectorized
+   pass over the projection bitmaps: index-AND queries (point/multi-point/
+   range) share a single pairwise ``and_popcount_batch`` kernel launch
+   (``Projections.candidates_batch``); version/evolution queries read their
+   posting lists directly.
+2. **Dedupe** — candidate chunk ids are unioned across the batch; a chunk
+   needed by ten queries is fetched once.
+3. **Fetch** — ONE combined ``multiget`` for chunks *and* chunk maps
+   (interleaved ``chunk/i``, ``map/i`` keys): a single backend round trip
+   for the whole session.
+4. **Extract** — per-query results are sliced out of the shared fetch; chunk
+   payload decodes and per-version chunk-map slices are cached and reused
+   across the queries that share them.
+
+Usage::
+
+    snap = rs.snapshot()                 # immutable read view (no flush)
+    results = snap.execute([
+        Q.version(v3),
+        Q.record(v3, pk=7),
+        Q.records(v3, [1, 2, 3]),
+        Q.range(v3, 10, 19),
+        Q.evolution(7),
+    ])
+    results[0].value                     # {pk: payload, ...}
+    results[0].stats                     # per-query QueryStats
+    results.batch                        # batch-level QueryStats
+                                         # (shared bytes attributed once)
+
+Reads never mutate the store: ``Snapshot`` holds the flushed state and
+``execute`` only touches the KVS.  ``RStore.get_*`` remain as thin wrappers
+over single-query batches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from .chunkstore import ChunkMap, StoredChunk
+from .index import Projections
+from .kvs import KVS
+from .types import unpack_ck
+from .version_graph import VersionGraph
+
+
+# ------------------------------------------------------------------- algebra
+@dataclass(frozen=True)
+class Query:
+    """One retrieval request.  Build via the :class:`Q` factory."""
+
+    kind: str                            # version | record | records | range | evolution
+    vid: Optional[int] = None
+    pk: Optional[int] = None
+    pks: Optional[Tuple[int, ...]] = None
+    key_lo: Optional[int] = None
+    key_hi: Optional[int] = None
+
+
+class Q:
+    """Query constructors: the session API's algebra (§2.4 query classes)."""
+
+    @staticmethod
+    def version(vid: int) -> Query:
+        """Q1: every record live in version ``vid`` → Dict[pk, bytes]."""
+        return Query(kind="version", vid=int(vid))
+
+    @staticmethod
+    def record(vid: int, pk: int) -> Query:
+        """Point lookup of ``pk`` in ``vid`` → Optional[bytes]."""
+        return Query(kind="record", vid=int(vid), pk=int(pk))
+
+    @staticmethod
+    def records(vid: int, pks: Iterable[int]) -> Query:
+        """Multi-point lookup in ``vid`` → Dict[pk, bytes] (absent keys
+        omitted)."""
+        return Query(kind="records", vid=int(vid),
+                     pks=tuple(int(p) for p in pks))
+
+    @staticmethod
+    def range(vid: int, key_lo: int, key_hi: int) -> Query:
+        """Q2: records of ``vid`` with pk in [key_lo, key_hi] → Dict."""
+        return Query(kind="range", vid=int(vid), key_lo=int(key_lo),
+                     key_hi=int(key_hi))
+
+    @staticmethod
+    def evolution(pk: int) -> Query:
+        """Q3: every distinct record ever stored under ``pk`` →
+        List[(origin_vid, bytes)] in origin order."""
+        return Query(kind="evolution", pk=int(pk))
+
+
+# -------------------------------------------------------------------- results
+@dataclass
+class QueryStats:
+    """Per-query (and, via :class:`BatchResult`, batch-level) fetch stats."""
+
+    chunks_fetched: int = 0
+    irrelevant_chunks: int = 0     # lossy-projection artifacts (§2.4)
+    bytes_fetched: int = 0
+    kvs_queries: int = 0           # backend round trips
+    records_returned: int = 0
+
+
+@dataclass
+class QueryResult:
+    query: Query
+    value: Any                     # Dict / Optional[bytes] / List — by kind
+    stats: QueryStats
+
+
+class BatchResult(List[QueryResult]):
+    """``Snapshot.execute``'s return: a List[QueryResult] carrying the
+    batch-level stats.  ``batch.bytes_fetched`` counts every fetched chunk
+    once, no matter how many queries shared it; per-query stats attribute a
+    chunk to every query that planned it."""
+
+    batch: QueryStats
+
+    def __init__(self, results: Iterable[QueryResult], batch: QueryStats):
+        super().__init__(results)
+        self.batch = batch
+
+
+# ------------------------------------------------------------------- snapshot
+class Snapshot:
+    """Immutable read view over the flushed store state.
+
+    Obtained via :meth:`RStore.snapshot`.  Holds the version graph,
+    projections and KVS handle as of the last flush; ``execute`` plans and
+    runs a whole batch of queries against it with one KVS round trip.
+    Reads never mutate the store (the seed API's implicit flush-on-read is
+    gone; ``RStoreConfig.auto_flush`` keeps it for back-compat at the
+    ``RStore`` facade).
+
+    Online (k=1) flushes after the snapshot only append chunks, so the
+    snapshot keeps serving its versions; a full ``build()`` (including any
+    k>1 flush) repartitions storage and *invalidates* the snapshot —
+    ``execute`` then raises rather than silently reading rewritten chunks.
+    """
+
+    def __init__(self, graph: VersionGraph, proj: Projections,
+                 kvs: KVS, epoch: Optional[int] = None,
+                 current_epoch: Optional[Callable[[], int]] = None) -> None:
+        self.graph = graph
+        self.proj = proj
+        self.kvs = kvs
+        self._vidx = {v: i for i, v in enumerate(graph.versions)}
+        # rebuild-epoch guard: a full build() repartitions and rewrites the
+        # chunk/* and map/* keys, so chunk ids planned from this snapshot's
+        # projections would dereference to unrelated data.  Online (k=1)
+        # flushes only append chunks and extend maps, so they don't
+        # invalidate snapshots and don't bump the epoch.
+        self._epoch = epoch
+        self._current_epoch = current_epoch
+
+    def _check_fresh(self) -> None:
+        if (self._epoch is not None and self._current_epoch is not None
+                and self._current_epoch() != self._epoch):
+            raise RuntimeError(
+                "snapshot invalidated by a full rebuild (build() or a k>1 "
+                "flush repartitions chunk storage); take a new snapshot()")
+
+    # ---------------------------------------------------------------- plan
+    def plan(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        """Candidate chunk ids per query — one vectorized pass.
+
+        Version/evolution queries read their posting lists; all index-AND
+        queries (record/records/range) share a single pairwise bitmap-kernel
+        launch via ``Projections.candidates_batch``.
+        """
+        empty = np.empty(0, np.int64)
+        cands: List[Optional[np.ndarray]] = [None] * len(queries)
+        anding: List[Tuple[int, np.ndarray]] = []
+        anding_pos: List[int] = []
+        for i, q in enumerate(queries):
+            if q.kind == "version":
+                cands[i] = self.proj.chunks_for_version(q.vid)
+            elif q.kind == "evolution":
+                cands[i] = self.proj.chunks_for_key(q.pk)
+            else:
+                if q.kind == "record":
+                    pks = np.asarray([q.pk], dtype=np.int64)
+                elif q.kind == "records":
+                    pks = np.asarray(q.pks, dtype=np.int64)
+                elif q.kind == "range":
+                    pks = self.proj.keys_in_range(q.key_lo, q.key_hi)
+                else:
+                    raise ValueError(f"unknown query kind {q.kind!r}")
+                if len(pks) == 0:
+                    cands[i] = empty
+                else:
+                    anding.append((q.vid, pks))
+                    anding_pos.append(i)
+        if anding:
+            for pos, ids in zip(anding_pos, self.proj.candidates_batch(anding)):
+                cands[pos] = ids
+        return cands  # type: ignore[return-value]
+
+    # ------------------------------------------------------------- execute
+    def execute(self, queries: Sequence[Query]) -> BatchResult:
+        """Plan → dedupe → ONE interleaved multiget → extract."""
+        self._check_fresh()
+        queries = list(queries)
+        cands = self.plan(queries)
+
+        nonempty = [c for c in cands if len(c)]
+        all_ids = (np.unique(np.concatenate(nonempty)) if nonempty
+                   else np.empty(0, np.int64))
+
+        batch = QueryStats()
+        batch.chunks_fetched = len(all_ids)
+        fetched: Dict[int, Tuple[StoredChunk, ChunkMap, int]] = {}
+        if len(all_ids):
+            q0 = self.kvs.stats.n_queries
+            b0 = self.kvs.stats.bytes_fetched
+            # interleaved chunk/map keys: chunks + maps in ONE round trip
+            keys = [k for c in all_ids for k in (f"chunk/{c}", f"map/{c}")]
+            blobs = self.kvs.multiget(keys)
+            batch.kvs_queries = self.kvs.stats.n_queries - q0
+            batch.bytes_fetched = self.kvs.stats.bytes_fetched - b0
+            for j, cid in enumerate(all_ids):
+                cb, mb = blobs[2 * j], blobs[2 * j + 1]
+                fetched[int(cid)] = (StoredChunk.from_bytes(cb),
+                                     ChunkMap.from_bytes(mb),
+                                     len(cb) + len(mb))
+
+        # shared extraction caches: decode each chunk's payloads once and
+        # slice each (chunk, version) membership once, however many queries
+        # in the session touch them
+        payloads: Dict[int, Dict[int, bytes]] = {}
+        members: Dict[Tuple[int, int], np.ndarray] = {}
+
+        def _payloads(cid: int) -> Dict[int, bytes]:
+            if cid not in payloads:
+                payloads[cid] = fetched[cid][0].payloads()
+            return payloads[cid]
+
+        def _members(cid: int, vidx: int) -> np.ndarray:
+            key = (cid, vidx)
+            if key not in members:
+                members[key] = fetched[cid][1].records_in_version(vidx)
+            return members[key]
+
+        results: List[QueryResult] = []
+        for q, cand in zip(queries, cands):
+            stats = QueryStats(
+                chunks_fetched=len(cand),
+                bytes_fetched=sum(fetched[int(c)][2] for c in cand),
+                kvs_queries=batch.kvs_queries if len(cand) else 0,
+            )
+            value = self._extract(q, cand, fetched, _payloads, _members, stats)
+            batch.records_returned += stats.records_returned
+            batch.irrelevant_chunks += stats.irrelevant_chunks
+            results.append(QueryResult(query=q, value=value, stats=stats))
+        return BatchResult(results, batch)
+
+    # ------------------------------------------------------------- extract
+    def _extract(self, q: Query, cand: np.ndarray, fetched, _payloads,
+                 _members, stats: QueryStats):
+        if q.kind == "version":
+            out: Dict[int, bytes] = {}
+            vidx = self._vidx[q.vid]
+            for c in cand:
+                cid = int(c)
+                cmap = fetched[cid][1]
+                locs = _members(cid, vidx)
+                if len(locs) == 0:
+                    stats.irrelevant_chunks += 1
+                    continue
+                pay = _payloads(cid)
+                for li in locs:
+                    pk, _ = unpack_ck(int(cmap.cks[li]))
+                    out[pk] = pay[int(li)]
+            stats.records_returned = len(out)
+            return out
+
+        if q.kind in ("record", "records", "range"):
+            vidx = self._vidx[q.vid]
+            out = {}
+            for c in cand:
+                cid = int(c)
+                cmap = fetched[cid][1]
+                locs = _members(cid, vidx)
+                keys = cmap.cks[locs] >> 32
+                if q.kind == "record":
+                    sel = locs[keys == q.pk]
+                elif q.kind == "records":
+                    sel = locs[np.isin(keys, np.asarray(q.pks, dtype=np.int64))]
+                else:
+                    sel = locs[(keys >= q.key_lo) & (keys <= q.key_hi)]
+                if len(sel) == 0:
+                    stats.irrelevant_chunks += 1
+                    continue
+                pay = _payloads(cid)
+                for li in sel:
+                    pk, _ = unpack_ck(int(cmap.cks[li]))
+                    out[pk] = pay[int(li)]
+            stats.records_returned = len(out)
+            if q.kind == "record":
+                return out.get(q.pk)
+            return out
+
+        if q.kind == "evolution":
+            evo: List[Tuple[int, bytes]] = []
+            for c in cand:
+                cid = int(c)
+                cmap = fetched[cid][1]
+                sel = np.flatnonzero((cmap.cks >> 32) == q.pk)
+                if len(sel) == 0:
+                    stats.irrelevant_chunks += 1
+                    continue
+                pay = _payloads(cid)
+                for li in sel:
+                    _, origin = unpack_ck(int(cmap.cks[li]))
+                    evo.append((origin, pay[int(li)]))
+            evo.sort(key=lambda t: self._vidx.get(t[0], 1 << 30))
+            stats.records_returned = len(evo)
+            return evo
+
+        raise ValueError(f"unknown query kind {q.kind!r}")

@@ -4,7 +4,10 @@ Two in-memory maps answer "which chunks might hold what I need":
   - version→chunks (drives Q1 full version retrieval),
   - key→chunks     (drives Q3 record evolution).
 Record/range retrieval ANDs the two (index-ANDing) — realized with the
-``bitmap`` Pallas kernel over chunk-membership bitmaps.  Both lists are
+``bitmap`` Pallas kernel over chunk-membership bitmaps; a whole session of
+queries is planned in ONE pairwise kernel launch (``candidates_batch``), and
+range predicates locate their keys via ``searchsorted`` over a cached sorted
+key array rather than scanning the key dictionary.  Both lists are
 *lossy*: a fetched chunk may turn out to hold no relevant record (the paper
 notes this explicitly); the exact information lives in the per-chunk maps.
 
@@ -15,7 +18,7 @@ reproduce the §2.4 index-size discussion.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -66,6 +69,10 @@ class Projections:
     version_chunks: Dict[int, np.ndarray]   # vid -> sorted chunk ids
     key_chunks: Dict[int, np.ndarray]       # pk  -> sorted chunk ids
     n_chunks: int
+    # sorted primary-key array (lazy cache) backing O(log n) range lookups;
+    # invalidated whenever key_chunks gains keys
+    _sorted_keys: Optional[np.ndarray] = field(default=None, repr=False,
+                                               compare=False)
 
     # -------------------------------------------------------------- building
     @staticmethod
@@ -109,20 +116,59 @@ class Projections:
 
     def candidates(self, vid: int, pks: Iterable[int]) -> np.ndarray:
         """Chunks possibly holding records of any of ``pks`` within version
-        ``vid``: AND of the key bitmaps (batched kernel) with the version
-        bitmap, OR'd across keys."""
-        pks = list(pks)
-        if not pks:
-            return np.empty(0, np.int64)
-        vrow = self._bitmap_of(self.version_chunks[vid])
-        kb = np.stack([self._bitmap_of(self.chunks_for_key(pk)) for pk in pks])
-        anded, counts = kops.and_popcount_batch(kb, vrow)
-        merged = np.bitwise_or.reduce(anded, axis=0)
-        return _bitmap_to_ids(merged, self.n_chunks)
+        ``vid``: AND of the key bitmaps with the version bitmap, OR'd across
+        keys.  Single-query form of :meth:`candidates_batch`."""
+        return self.candidates_batch([(vid, pks)])[0]
+
+    def candidates_batch(
+            self, items: Sequence[Tuple[int, Iterable[int]]],
+    ) -> List[np.ndarray]:
+        """Plan a whole batch of index-AND queries in ONE kernel launch.
+
+        ``items`` is a list of ``(vid, pks)`` pairs — one per point/multi-
+        point/range query in a session.  Per query, the key bitmaps are OR'd
+        on the host (cheap: W words each) into one row; the N OR'd key rows
+        are then AND'd pairwise against the N version rows by a single
+        ``and_popcount_batch`` call (the (N, W) & (N, W) kernel path).
+        Returns one sorted chunk-id array per item.
+        """
+        if not items:
+            return []
+        W = (self.n_chunks + 31) // 32
+        key_rows = np.zeros((len(items), max(W, 1)), dtype=np.uint32)
+        ver_rows = np.zeros((len(items), max(W, 1)), dtype=np.uint32)
+        nonempty = np.zeros(len(items), dtype=bool)
+        for i, (vid, pks) in enumerate(items):
+            ver_rows[i] = self._bitmap_of(self.version_chunks[vid])
+            for pk in pks:
+                ids = self.key_chunks.get(pk)
+                if ids is not None and len(ids):
+                    np.bitwise_or.at(key_rows[i], ids // 32,
+                                     np.uint32(1) << (ids % 32).astype(np.uint32))
+                    nonempty[i] = True
+        anded, _ = kops.and_popcount_batch(key_rows, ver_rows)
+        empty = np.empty(0, np.int64)
+        return [_bitmap_to_ids(anded[i], self.n_chunks) if nonempty[i] else empty
+                for i in range(len(items))]
+
+    # ----------------------------------------------------------- key ranges
+    def sorted_keys(self) -> np.ndarray:
+        """All indexed primary keys, sorted (cached; see extend_keys)."""
+        if self._sorted_keys is None or len(self._sorted_keys) != len(self.key_chunks):
+            self._sorted_keys = np.sort(np.fromiter(
+                self.key_chunks.keys(), dtype=np.int64, count=len(self.key_chunks)))
+        return self._sorted_keys
+
+    def keys_in_range(self, key_lo: int, key_hi: int) -> np.ndarray:
+        """Indexed keys in [key_lo, key_hi] — O(log n + m) via searchsorted
+        over the sorted key array (not an O(all-keys) dict scan)."""
+        ks = self.sorted_keys()
+        lo = np.searchsorted(ks, key_lo, side="left")
+        hi = np.searchsorted(ks, key_hi, side="right")
+        return ks[lo:hi]
 
     def candidates_range(self, vid: int, key_lo: int, key_hi: int) -> np.ndarray:
-        pks = [pk for pk in self.key_chunks if key_lo <= pk <= key_hi]
-        return self.candidates(vid, pks)
+        return self.candidates(vid, self.keys_in_range(key_lo, key_hi))
 
     # ----------------------------------------------------------- index size
     def compressed_size(self) -> Dict[str, int]:

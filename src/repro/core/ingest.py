@@ -1,17 +1,34 @@
-"""RStore facade: ingest (commit), build, flush, and queries (§2.4).
+"""RStore facade: ingest (commit), build, flush, and query sessions (§2.4).
 
-The user-facing API mirrors the paper's application server:
+The user-facing API mirrors the paper's application server, with retrieval
+redesigned around a plan/execute split (:mod:`repro.core.api`):
 
     rs = RStore(RStoreConfig(algorithm="bottom_up", capacity=1<<20, k=3))
     v0 = rs.init_root({pk: payload, ...})
     v1 = rs.commit([v0], adds={pk: new_payload}, dels=[pk2])   # delta ingest
+
+    # Session API — the native path: a server collects a wave of queries,
+    # the engine plans them together, dedupes candidate chunks across them,
+    # and fetches chunks + maps in ONE KVS round trip.
+    snap = rs.snapshot()                       # immutable read view
+    res = snap.execute([Q.version(v1),
+                        Q.record(v1, pk),
+                        Q.range(v1, lo, hi),
+                        Q.evolution(pk)])
+    res[0].value, res[0].stats                 # per-query results/stats
+    res.batch                                  # batch stats (1 round trip)
+
+    # Back-compat wrappers — single-query sessions:
     records, stats = rs.get_version(v1)
 
 Commits only carry the delta ("the system requests only those records from
 the client that have changed").  Deltas accumulate in the delta store and are
-chunked in batches (§4); reads flush pending work first.  ``build()`` runs
-the full offline pipeline (sub-chunking when k>1 → partitioning → chunk/map
-writes → projections).
+chunked in batches (§4).  ``flush()`` is explicit; with the default
+``RStoreConfig.auto_flush=True`` the facade keeps the seed behaviour of
+flushing before a read, while ``auto_flush=False`` makes reads strictly
+side-effect free (``snapshot()`` then refuses to observe unflushed deltas).
+``build()`` runs the full offline pipeline (sub-chunking when k>1 →
+partitioning → chunk/map writes → projections).
 """
 from __future__ import annotations
 
@@ -25,7 +42,7 @@ from .index import Projections
 from .kvs import KVS, InMemoryKVS
 from .online import partition_batch
 from .partition import ALGORITHMS, DeltaBaseline
-from .query import QueryProcessor
+from .api import BatchResult, Q, Snapshot
 from .subchunk import (build_subchunks, build_transformed,
                        compressed_subchunk_sizes)
 from .types import Chunk, Partitioning, pack_ck
@@ -41,6 +58,7 @@ class RStoreConfig:
     beta: int = 64                   # BOTTOM-UP subtree bound (§3.2.1)
     shingle_hashes: int = 8
     store_payloads: bool = True
+    auto_flush: bool = True          # seed behaviour: reads flush pending work
 
     def algo_kwargs(self) -> dict:
         if self.algorithm == "bottom_up":
@@ -63,6 +81,9 @@ class RStore:
         self.proj: Optional[Projections] = None
         self._subchunk_groups: Optional[List[np.ndarray]] = None
         self._flushed_versions = 0
+        # bumped on every full build(): existing snapshots' chunk ids then
+        # point at repartitioned storage, so they must fail loudly
+        self._build_epoch = 0
         # chunk id -> record ids in *stored order* (chunk maps must preserve
         # the chunk's local record indexing when rebuilt)
         self._chunk_records: Dict[int, np.ndarray] = {}
@@ -196,6 +217,7 @@ class RStore:
 
     def build(self) -> Partitioning:
         """Full offline build (also the k>1 path)."""
+        self._build_epoch += 1
         self.pending = []
         cfg = self.config
         graph = self.graph
@@ -241,28 +263,60 @@ class RStore:
         return part
 
     # ------------------------------------------------------------- queries
-    def _qp(self) -> QueryProcessor:
-        if self.pending:
-            self.flush()
-        assert self.proj is not None, "no data ingested"
-        return QueryProcessor(self.graph, self.proj, self.kvs)
+    def snapshot(self) -> Snapshot:
+        """Immutable read view of the flushed state (the session API).
 
+        With ``auto_flush=True`` (seed behaviour) pending deltas are flushed
+        first; with ``auto_flush=False`` reads are strictly side-effect free
+        and unflushed deltas raise — call :meth:`flush` explicitly.
+        """
+        if self.pending:
+            if self.config.auto_flush:
+                self.flush()
+            else:
+                raise RuntimeError(
+                    f"{len(self.pending)} unflushed version(s); call flush() "
+                    "explicitly (auto_flush=False makes reads side-effect free)")
+        assert self.proj is not None, "no data ingested"
+        return Snapshot(self.graph, self.proj, self.kvs,
+                        epoch=self._build_epoch,
+                        current_epoch=lambda: self._build_epoch)
+
+    def execute(self, queries) -> "BatchResult":
+        """Run a batch of queries against a fresh snapshot (convenience)."""
+        return self.snapshot().execute(queries)
+
+    # Back-compat wrappers: each is a single-query session (one KVS round
+    # trip; the seed paid two — chunks, then maps).
     def get_version(self, vid: int):
-        return self._qp().get_version(vid)
+        r = self.snapshot().execute([Q.version(vid)])[0]
+        return r.value, r.stats
 
     def get_record(self, vid: int, pk: int):
-        return self._qp().get_record(vid, pk)
+        r = self.snapshot().execute([Q.record(vid, pk)])[0]
+        return r.value, r.stats
 
     def get_range(self, vid: int, key_lo: int, key_hi: int):
-        return self._qp().get_range(vid, key_lo, key_hi)
+        r = self.snapshot().execute([Q.range(vid, key_lo, key_hi)])[0]
+        return r.value, r.stats
 
     def get_evolution(self, pk: int):
-        return self._qp().get_evolution(pk)
+        r = self.snapshot().execute([Q.evolution(pk)])[0]
+        return r.value, r.stats
 
     # ------------------------------------------------------------- metrics
     def storage_stats(self) -> Dict[str, int]:
-        stored = sum(len(self.kvs.get(f"chunk/{c}")) for c in range(self.n_chunks))
-        self.kvs.stats.reset()
+        """Chunk/index sizes.  Side-effect free on query counters: the sizing
+        multiget is excluded from ``kvs.stats`` by save/restore instead of
+        the seed's destructive ``reset()`` (which wiped whatever the caller
+        was accumulating)."""
+        saved = self.kvs.stats.snapshot()
+        if self.n_chunks:
+            blobs = self.kvs.multiget([f"chunk/{c}" for c in range(self.n_chunks)])
+            stored = sum(len(b) for b in blobs)
+        else:
+            stored = 0
+        self.kvs.stats.restore(saved)
         out = {
             "n_chunks": self.n_chunks,
             "stored_chunk_bytes": stored,

@@ -37,6 +37,20 @@ class KVSStats:
         self.n_queries = self.n_values = 0
         self.bytes_fetched = self.bytes_stored = 0
 
+    def snapshot(self) -> "KVSStats":
+        """Copy of the current counters (pair with :meth:`restore` to run
+        bookkeeping traffic — e.g. chunk sizing — without polluting stats a
+        caller is accumulating)."""
+        return KVSStats(n_queries=self.n_queries, n_values=self.n_values,
+                        bytes_fetched=self.bytes_fetched,
+                        bytes_stored=self.bytes_stored)
+
+    def restore(self, saved: "KVSStats") -> None:
+        self.n_queries = saved.n_queries
+        self.n_values = saved.n_values
+        self.bytes_fetched = saved.bytes_fetched
+        self.bytes_stored = saved.bytes_stored
+
 
 class KVS(Protocol):
     stats: KVSStats

@@ -1,126 +1,52 @@
-"""Query processing (§2.4): the four retrieval classes over chunked storage.
+"""Single-query compatibility layer over the plan/execute engine (§2.4).
 
-Every query follows the same shape: consult the lossy projection(s) → ONE
-batched multiget of candidate chunks (+ their chunk maps) → use the exact
-per-chunk maps to extract the relevant records.  Because the projections are
-lossy, a fetched chunk may contain nothing relevant; stats record that.
+The four retrieval classes live in :mod:`repro.core.api` now: a
+:class:`~repro.core.api.Snapshot` plans a whole batch of queries in one
+vectorized projection pass and fetches every candidate chunk *and* chunk map
+in ONE interleaved ``multiget`` round trip.  :class:`QueryProcessor` is the
+seed API's shape — one query at a time — implemented as single-query batches
+on that engine, so each ``get_*`` costs exactly one KVS round trip (the seed
+paid two: chunks, then maps).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
-from .chunkstore import ChunkMap, StoredChunk
+from .api import BatchResult, Q, Query, QueryResult, QueryStats, Snapshot
 from .index import Projections
 from .kvs import KVS
-from .types import unpack_ck
 from .version_graph import VersionGraph
 
-
-@dataclass
-class QueryStats:
-    chunks_fetched: int = 0
-    irrelevant_chunks: int = 0     # lossy-projection artifacts (§2.4)
-    bytes_fetched: int = 0
-    kvs_queries: int = 0
-    records_returned: int = 0
+__all__ = ["QueryProcessor", "QueryStats", "Q", "Query", "QueryResult",
+           "BatchResult", "Snapshot"]
 
 
 class QueryProcessor:
+    """One-query-at-a-time facade over :class:`Snapshot` (back-compat)."""
+
     def __init__(self, graph: VersionGraph, projections: Projections,
                  kvs: KVS) -> None:
         self.graph = graph
         self.proj = projections
         self.kvs = kvs
-        self._vidx = {v: i for i, v in enumerate(graph.versions)}
+        self._snap = Snapshot(graph, projections, kvs)
 
-    # ------------------------------------------------------------- plumbing
-    def _fetch(self, chunk_ids: np.ndarray,
-               stats: QueryStats) -> List[Tuple[StoredChunk, ChunkMap]]:
-        if len(chunk_ids) == 0:
-            return []
-        q0 = self.kvs.stats.n_queries
-        b0 = self.kvs.stats.bytes_fetched
-        blobs = self.kvs.multiget([f"chunk/{c}" for c in chunk_ids])
-        maps = self.kvs.multiget([f"map/{c}" for c in chunk_ids])
-        stats.chunks_fetched += len(chunk_ids)
-        stats.kvs_queries += self.kvs.stats.n_queries - q0
-        stats.bytes_fetched += self.kvs.stats.bytes_fetched - b0
-        return [(StoredChunk.from_bytes(b), ChunkMap.from_bytes(m))
-                for b, m in zip(blobs, maps)]
+    def _one(self, q: Query) -> QueryResult:
+        return self._snap.execute([q])[0]
 
-    # ------------------------------------------------------------ Q1: version
     def get_version(self, vid: int) -> Tuple[Dict[int, bytes], QueryStats]:
-        stats = QueryStats()
-        vidx = self._vidx[vid]
-        out: Dict[int, bytes] = {}
-        for chunk, cmap in self._fetch(self.proj.chunks_for_version(vid), stats):
-            locs = cmap.records_in_version(vidx)
-            if len(locs) == 0:
-                stats.irrelevant_chunks += 1
-                continue
-            payloads = chunk.payloads()
-            for li in locs:
-                pk, _ = unpack_ck(int(cmap.cks[li]))
-                out[pk] = payloads[int(li)]
-        stats.records_returned = len(out)
-        return out, stats
+        r = self._one(Q.version(vid))
+        return r.value, r.stats
 
-    # ----------------------------------------------------------- Q2: range
     def get_range(self, vid: int, key_lo: int,
                   key_hi: int) -> Tuple[Dict[int, bytes], QueryStats]:
-        stats = QueryStats()
-        vidx = self._vidx[vid]
-        cand = self.proj.candidates_range(vid, key_lo, key_hi)
-        out: Dict[int, bytes] = {}
-        for chunk, cmap in self._fetch(cand, stats):
-            locs = cmap.records_in_version(vidx)
-            keys = (cmap.cks[locs] >> 32)
-            sel = locs[(keys >= key_lo) & (keys <= key_hi)]
-            if len(sel) == 0:
-                stats.irrelevant_chunks += 1
-                continue
-            payloads = chunk.payloads()
-            for li in sel:
-                pk, _ = unpack_ck(int(cmap.cks[li]))
-                out[pk] = payloads[int(li)]
-        stats.records_returned = len(out)
-        return out, stats
+        r = self._one(Q.range(vid, key_lo, key_hi))
+        return r.value, r.stats
 
-    # ---------------------------------------------------------- Q-point
     def get_record(self, vid: int, pk: int) -> Tuple[Optional[bytes], QueryStats]:
-        stats = QueryStats()
-        vidx = self._vidx[vid]
-        cand = self.proj.candidates(vid, [pk])   # index-ANDing (bitmap kernel)
-        result: Optional[bytes] = None
-        for chunk, cmap in self._fetch(cand, stats):
-            locs = cmap.records_in_version(vidx)
-            keys = (cmap.cks[locs] >> 32)
-            sel = locs[keys == pk]
-            if len(sel) == 0:
-                stats.irrelevant_chunks += 1
-                continue
-            result = chunk.payloads()[int(sel[0])]
-            stats.records_returned = 1
-        return result, stats
+        r = self._one(Q.record(vid, pk))
+        return r.value, r.stats
 
-    # ------------------------------------------------------- Q3: evolution
     def get_evolution(self, pk: int) -> Tuple[List[Tuple[int, bytes]], QueryStats]:
-        """All distinct records ever stored under ``pk`` (origin order)."""
-        stats = QueryStats()
-        out: List[Tuple[int, bytes]] = []
-        for chunk, cmap in self._fetch(self.proj.chunks_for_key(pk), stats):
-            keys = (cmap.cks >> 32)
-            sel = np.flatnonzero(keys == pk)
-            if len(sel) == 0:
-                stats.irrelevant_chunks += 1
-                continue
-            payloads = chunk.payloads()
-            for li in sel:
-                _, origin = unpack_ck(int(cmap.cks[li]))
-                out.append((origin, payloads[int(li)]))
-        out.sort(key=lambda t: self._vidx.get(t[0], 1 << 30))
-        stats.records_returned = len(out)
-        return out, stats
+        r = self._one(Q.evolution(pk))
+        return r.value, r.stats

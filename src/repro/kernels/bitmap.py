@@ -3,8 +3,11 @@
 Record/range retrieval intersects the two lossy projections (key→chunks and
 version→chunks).  With chunk membership as bitmaps (1 bit per chunk), the
 intersection is a bitwise AND and the candidate count a popcount.  The kernel
-ANDs a batch of key bitmaps (N, W) against one version bitmap (1, W) held in
-VMEM across the whole grid, emitting the AND tiles plus per-row popcounts.
+ANDs a batch of key bitmaps (N, W) against either one shared version bitmap
+(1, W) held in VMEM across the whole grid (single-query index-ANDing) or a
+per-row batch of version bitmaps (N, W) tiled with the keys (the plan/execute
+engine's batched sessions: row i carries query i's version bitmap), emitting
+the AND tiles plus per-row popcounts.
 
 Popcount uses the SWAR bit-twiddle (no LUT: TPU VPU has no gather), entirely
 in uint32 lanes.
@@ -27,33 +30,38 @@ def _popcount32(v: jax.Array) -> jax.Array:
 
 
 def _and_popcount_kernel(bms_ref, row_ref, out_ref, cnt_ref):
-    x = bms_ref[...] & row_ref[...]            # (BLOCK_N, W) & (1, W) broadcast
+    # (BLOCK_N, W) & (1, W) broadcasts; & (BLOCK_N, W) is elementwise
+    x = bms_ref[...] & row_ref[...]
     out_ref[...] = x
     cnt_ref[0, :] = jnp.sum(_popcount32(x).astype(jnp.int32), axis=1)
 
 
 def and_popcount(bitmaps: jax.Array, row: jax.Array,
                  *, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """AND a batch of bitmaps against one row bitmap, with popcounts.
+    """AND a batch of bitmaps against one shared row or per-row bitmaps.
 
     Args:
       bitmaps: (N, W) uint32, N % 128 == 0.
-      row: (1, W) uint32 (broadcast against every row).
+      row: (1, W) uint32 (broadcast against every row) or (N, W) uint32
+        (pairwise: row i ANDs bitmaps[i] — the batched-session plan path).
     Returns:
       (anded (N, W) uint32, popcounts (N,) int32).
     """
     N, W = bitmaps.shape
-    if row.shape != (1, W):
-        raise ValueError(f"row must be (1, {W}), got {row.shape}")
+    if row.shape not in ((1, W), (N, W)):
+        raise ValueError(f"row must be (1, {W}) or ({N}, {W}), got {row.shape}")
+    pairwise = row.shape[0] == N and N != 1
     if N % BLOCK_N:
         raise ValueError(f"N={N} must be a multiple of {BLOCK_N}")
     grid = (N // BLOCK_N,)
+    row_spec = (pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)) if pairwise
+                else pl.BlockSpec((1, W), lambda i: (0, 0)))
     anded, counts = pl.pallas_call(
         _and_popcount_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),
-            pl.BlockSpec((1, W), lambda i: (0, 0)),
+            row_spec,
         ],
         out_specs=[
             pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),

@@ -158,14 +158,26 @@ def _and_jit(bms, row, interpret=INTERPRET):
 
 def and_popcount_batch(bitmaps: np.ndarray, row: np.ndarray,
                        *, interpret: bool = INTERPRET) -> Tuple[np.ndarray, np.ndarray]:
-    """AND (N, W) bitmaps against a (W,) row; returns (anded, popcounts)."""
+    """AND (N, W) bitmaps against a row; returns (anded, popcounts).
+
+    ``row`` is a single shared (W,)/(1, W) bitmap (broadcast against every
+    bitmap — the single-query index-AND) or a pairwise (N, W) batch (row i
+    ANDs bitmaps[i] — one kernel launch plans a whole query session).
+    """
     N, W = bitmaps.shape
+    row = np.asarray(row)
+    if row.ndim == 1:
+        row = row[None, :]
+    if row.shape not in ((1, W), (N, W)):
+        raise ValueError(f"row must be ({W},), (1, {W}) or ({N}, {W}); "
+                         f"got {row.shape}")
+    pairwise = row.shape[0] == N and N != 1
     Np = _pad_to(max(N, 1), _bitmap.BLOCK_N)
     Wp = _pad_to(max(W, 1), _P_LANE)
     bb = np.zeros((Np, Wp), dtype=np.uint32)
-    rb = np.zeros((1, Wp), dtype=np.uint32)
+    rb = np.zeros((Np if pairwise else 1, Wp), dtype=np.uint32)
     bb[:N, :W] = bitmaps
-    rb[0, :W] = row
+    rb[:row.shape[0], :W] = row
     if interpret:
         anded, cnt = _and_ref_jit(jnp.asarray(bb), jnp.asarray(rb))
     else:

@@ -8,8 +8,9 @@ whose bytes did not change since the parent version dedupe automatically
 forks form the version DAG.  Queries map onto training operations:
 
   Q1 full version retrieval   → restore(version)
-  Q2 range retrieval          → partial restore (elastic rescale: only the
-                                key range a new mesh shard needs)
+  Q.records multi-point batch → partial restore (elastic rescale: only the
+                                blocks a new mesh shard needs, one batched
+                                session → one KVS round trip)
   Q3 record evolution         → per-tensor training forensics
 
 The commit path is asynchronous-friendly: deltas land in RStore's delta store
@@ -27,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import RStore, RStoreConfig
+from ..core import Q, RStore, RStoreConfig
 
 
 def _path_str(path) -> str:
@@ -125,25 +126,30 @@ class VersionedCheckpointer:
 
     # -------------------------------------------------------------- restore
     def restore(self, vid: int, like=None):
-        """Q1: full version retrieval → pytree."""
-        records, _ = self.rs.get_version(vid)
-        return self._assemble(vid, records, like)
+        """Q1: full version retrieval → pytree (one-query session)."""
+        res = self.rs.snapshot().execute([Q.version(vid)])
+        return self._assemble(vid, res[0].value, like)
 
     def restore_tensors(self, vid: int, prefixes: Sequence[str]):
-        """Q2-flavoured partial restore: only tensors matching prefixes.
+        """Partial restore: only tensors matching prefixes.
 
-        Issues one range/multi-key retrieval per tensor (contiguous block
-        keys are hashed, so we go through the key index per block)."""
+        Block keys are hashed (not contiguous), so each tensor is a
+        multi-point ``Q.records`` query; the whole restore is ONE batched
+        session — every selected tensor's blocks arrive in a single KVS
+        round trip (the seed issued one get_record per block)."""
         metas = self.meta[vid]
+        selected = [(pstr, tm) for pstr, tm in metas.items()
+                    if any(pstr.startswith(p) for p in prefixes)]
+        if not selected:
+            return {}
+        res = self.rs.snapshot().execute(
+            [Q.records(vid, tm.block_keys) for _, tm in selected])
         out: Dict[str, np.ndarray] = {}
-        for pstr, tm in metas.items():
-            if not any(pstr.startswith(p) for p in prefixes):
-                continue
+        for (pstr, tm), r in zip(selected, res):
             blobs = []
             for pk in tm.block_keys:
-                rec, _ = self.rs.get_record(vid, pk)
-                assert rec is not None, f"missing block {pstr}"
-                blobs.append(rec)
+                assert pk in r.value, f"missing block {pstr}"
+                blobs.append(r.value[pk])
             out[pstr] = self._tensor_from(tm, blobs)
         return out
 

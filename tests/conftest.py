@@ -1,5 +1,7 @@
+
 import os
 import sys
+import types
 
 # 8 host devices: enough for sharding/shard_map tests, cheap enough for the
 # rest (the 512-device platform is reserved for launch/dryrun.py)
@@ -7,3 +9,64 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+# --------------------------------------------------------------------------
+# hypothesis shim: the property tests require hypothesis (requirements-dev
+# .txt), but its absence must not break *collection* of the non-property
+# tests in the same modules.  When the real package is missing we install a
+# stub whose @given marks the decorated test as skipped; everything else in
+# the modules collects and runs normally.
+# --------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    class _Strategy:
+        """Inert stand-in for a hypothesis strategy object."""
+
+        def __call__(self, *a, **k):
+            return _Strategy()
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    def _strategy_factory(*a, **k):
+        return _Strategy()
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            # no functools.wraps: pytest must see a zero-arg signature, not
+            # the strategy-bound parameters of the wrapped property test
+            def wrapper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+            wrapper.__name__ = fn.__name__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _HealthCheck:
+        def __getattr__(self, name):
+            return name
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _strategy_factory  # PEP 562
+    _st.composite = lambda fn: _strategy_factory
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.HealthCheck = _HealthCheck()
+    _hyp.strategies = _st
+    _hyp.assume = lambda *a, **k: True
+    _hyp.note = lambda *a, **k: None
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -17,8 +17,8 @@ from repro.sharding.rules import default_rules, dp_only_rules, mesh_env
 def _mesh(shape=(2, 4), axes=("data", "model")):
     if np.prod(shape) > jax.device_count():
         pytest.skip(f"needs {np.prod(shape)} devices")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.launch.mesh import _make_mesh   # shared AxisType compat
+    return _make_mesh(shape, axes)
 
 
 @pytest.fixture(scope="module", autouse=True)
@@ -125,7 +125,8 @@ def test_hlo_analyzer_multiplies_scan_bodies():
     assert abs(costs.flops - want) / want < 0.01
     # XLA's own analysis undercounts (visits the body once) — the reason
     # this analyzer exists
-    assert c.cost_analysis()["flops"] < costs.flops
+    from benchmarks.hlo_analysis import xla_cost_analysis
+    assert xla_cost_analysis(c)["flops"] < costs.flops
 
 
 def test_hlo_analyzer_slice_aware_bytes():
