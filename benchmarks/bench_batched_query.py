@@ -26,6 +26,9 @@ from .common import emit, save_json
 SPEC = DatasetSpec(n_versions=120, n_base_records=600, pct_update=0.1,
                    record_size=512, payloads=True, p_d=0.05,
                    branch_prob=0.1, seed=17)
+SMOKE_SPEC = DatasetSpec(n_versions=30, n_base_records=150, pct_update=0.1,
+                         record_size=128, payloads=True, p_d=0.05,
+                         branch_prob=0.1, seed=17)
 CAPACITY = 32 * 1024
 BATCH = 64
 
@@ -53,15 +56,15 @@ def _cost(stats: KVSStats) -> float:
     return stats.simulated_seconds()
 
 
-def run():
+def run(smoke: bool = False):
     rng = np.random.default_rng(7)
-    g = generate(SPEC)
+    g = generate(SMOKE_SPEC if smoke else SPEC)
     rs = RStore(RStoreConfig(algorithm="bottom_up", capacity=CAPACITY,
                              batch_size=10**9))
     rs.graph = g
     rs._grow_r2c()
     rs.build()
-    qs = _mixed_workload(rs, rng)
+    qs = _mixed_workload(rs, rng, n=16 if smoke else BATCH)
     snap = rs.snapshot()
 
     # ---- batched session: one planned wave, one round trip ---------------

@@ -14,7 +14,7 @@ def main() -> None:
     from . import (bench_batched_query, bench_chunksize, bench_fig8_span,
                    bench_fig9_beta, bench_fig10_compression,
                    bench_fig11_query, bench_fig12_scaling, bench_fig13_online,
-                   bench_table1)
+                   bench_table1, bench_write_path)
 
     suites = [
         ("table1_costmodel", bench_table1.run),
@@ -24,6 +24,7 @@ def main() -> None:
         ("fig10_compression", bench_fig10_compression.run),
         ("fig11_query", bench_fig11_query.run),
         ("batched_query", bench_batched_query.run),
+        ("write_path", bench_write_path.run),
         ("fig12_scaling", bench_fig12_scaling.run),
         ("fig13_online", bench_fig13_online.run),
     ]

@@ -8,7 +8,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import Q, RStore, RStoreConfig
+from repro.core import InMemoryKVS, Q, RStore, RStoreConfig, ShardedKVS
 
 rng = np.random.default_rng(0)
 
@@ -20,16 +20,26 @@ def doc(payload: str) -> bytes:
 
 
 def main():
+    kvs = ShardedKVS([InMemoryKVS() for _ in range(4)])  # 4-shard backend
     rs = RStore(RStoreConfig(algorithm="bottom_up",   # the paper's best
                              capacity=4096,           # chunk size C
                              k=3,                     # sub-chunk compression
-                             batch_size=4))           # online batching (§4)
+                             batch_size=4),           # online batching (§4)
+                kvs=kvs)
 
-    # -- commit a root collection and a few derived versions ---------------
-    v0 = rs.init_root({pk: doc(f"patient-{pk}/baseline") for pk in range(50)})
-    v1 = rs.commit([v0], adds={7: doc("patient-7/updated-labs")})
-    v2 = rs.commit([v0], adds={50: doc("patient-50/new-enrollee")}, dels=[3])
-    v3 = rs.commit([v1, v2], adds={8: doc("patient-8/merged-analysis")})
+    # -- write session: stage a wave of commits, flush once ----------------
+    # All chunks + maps of the whole session reach the backend as ONE
+    # multiput per shard (the group commit).
+    with rs.writer() as w:
+        v0 = w.init_root({pk: doc(f"patient-{pk}/baseline")
+                          for pk in range(50)})
+        v1 = w.commit([v0], adds={7: doc("patient-7/updated-labs")})
+        v2 = w.commit([v0], adds={50: doc("patient-50/new-enrollee")},
+                      dels=[3])
+        v3 = w.commit([v1, v2], adds={8: doc("patient-8/merged-analysis")})
+    print(f"4-version write session = {kvs.stats.n_put_queries} write round "
+          f"trips over {len(kvs.shards)} shards "
+          f"({kvs.stats.n_values_put} blobs)")
 
     # -- session API: plan a wave of queries, execute in ONE round trip ----
     snap = rs.snapshot()                       # immutable read view

@@ -2,7 +2,9 @@
 layered over a distributed key-value store."""
 from .api import (BatchResult, Q, Query, QueryResult, QueryStats, Snapshot)
 from .datagen import PAPER_DATASETS, DatasetSpec, dataset_stats, generate
-from .ingest import RStore, RStoreConfig
+from .ingest import RStore, RStoreConfig, WriteSession
+from .kvs import (Backend, InMemoryKVS, KVSStats, ShardedDeviceKVS,
+                  ShardedKVS)
 from .types import Chunk, CompositeKey, Delta, Partitioning, Record
 from .version_graph import DeltaIds, RecordStore, VersionGraph
 
@@ -11,4 +13,6 @@ __all__ = [
     "CompositeKey", "Record", "Delta", "Chunk", "Partitioning",
     "DatasetSpec", "PAPER_DATASETS", "generate", "dataset_stats",
     "Q", "Query", "QueryResult", "QueryStats", "BatchResult", "Snapshot",
+    "WriteSession", "Backend", "InMemoryKVS", "KVSStats", "ShardedKVS",
+    "ShardedDeviceKVS",
 ]

@@ -39,6 +39,12 @@ Usage::
 Reads never mutate the store: ``Snapshot`` holds the flushed state and
 ``execute`` only touches the KVS.  ``RStore.get_*`` remain as thin wrappers
 over single-query batches.
+
+The write side mirrors this design: :class:`repro.core.ingest.WriteSession`
+(``rs.writer()``) stages a wave of commits and group-flushes them through
+one ``Backend.multiput`` — under :class:`repro.core.kvs.ShardedKVS` both
+directions cost one round trip per shard touched, however many queries or
+chunks the session carries.
 """
 from __future__ import annotations
 
@@ -50,7 +56,7 @@ import numpy as np
 
 from .chunkstore import ChunkMap, StoredChunk
 from .index import Projections
-from .kvs import KVS
+from .kvs import Backend
 from .types import unpack_ck
 from .version_graph import VersionGraph
 
@@ -151,7 +157,7 @@ class Snapshot:
     """
 
     def __init__(self, graph: VersionGraph, proj: Projections,
-                 kvs: KVS, epoch: Optional[int] = None,
+                 kvs: Backend, epoch: Optional[int] = None,
                  current_epoch: Optional[Callable[[], int]] = None) -> None:
         self.graph = graph
         self.proj = proj

@@ -86,6 +86,9 @@ class StoredChunk:
     subchunks: List[SubChunkBlob]
     raw_bytes: int = 0                   # un-encoded payload bytes
     stored_bytes: int = 0                # encoded (what the KVS holds)
+    # memoized serialization: chunks are write-once, and the build paths
+    # both size the encoding and stage it for the group commit
+    _encoded: Optional[bytes] = field(default=None, repr=False, compare=False)
 
     def payloads(self) -> Dict[int, bytes]:
         """Decode every record: local index -> payload bytes."""
@@ -114,15 +117,17 @@ class StoredChunk:
 
     # ------------------------------------------------------------ serialization
     def to_bytes(self) -> bytes:
-        parts = [struct.pack("<III", self.chunk_id, len(self.cks), len(self.subchunks))]
-        parts.append(self.cks.astype("<i8").tobytes())
-        for sc in self.subchunks:
-            parts.append(struct.pack("<II", len(sc.local_ids), len(sc.blob)))
-            parts.append(sc.local_ids.astype("<i4").tobytes())
-            parts.append(sc.parent_pos.astype("<i4").tobytes())
-            parts.append(sc.lengths.astype("<i4").tobytes())
-            parts.append(sc.blob)
-        return b"".join(parts)
+        if self._encoded is None:
+            parts = [struct.pack("<III", self.chunk_id, len(self.cks), len(self.subchunks))]
+            parts.append(self.cks.astype("<i8").tobytes())
+            for sc in self.subchunks:
+                parts.append(struct.pack("<II", len(sc.local_ids), len(sc.blob)))
+                parts.append(sc.local_ids.astype("<i4").tobytes())
+                parts.append(sc.parent_pos.astype("<i4").tobytes())
+                parts.append(sc.lengths.astype("<i4").tobytes())
+                parts.append(sc.blob)
+            self._encoded = b"".join(parts)
+        return self._encoded
 
     @staticmethod
     def from_bytes(buf: bytes) -> "StoredChunk":

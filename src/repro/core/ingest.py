@@ -1,34 +1,41 @@
-"""RStore facade: ingest (commit), build, flush, and query sessions (§2.4).
+"""RStore facade: ingest (commit), build, flush, and query/write sessions
+(§2.4).
 
-The user-facing API mirrors the paper's application server, with retrieval
-redesigned around a plan/execute split (:mod:`repro.core.api`):
+The user-facing API mirrors the paper's application server, with *both*
+directions redesigned around a plan/execute split: retrieval through
+:mod:`repro.core.api`'s batched read sessions, and ingest through
+group-committing write sessions:
 
     rs = RStore(RStoreConfig(algorithm="bottom_up", capacity=1<<20, k=3))
-    v0 = rs.init_root({pk: payload, ...})
-    v1 = rs.commit([v0], adds={pk: new_payload}, dels=[pk2])   # delta ingest
 
-    # Session API — the native path: a server collects a wave of queries,
-    # the engine plans them together, dedupes candidate chunks across them,
-    # and fetches chunks + maps in ONE KVS round trip.
-    snap = rs.snapshot()                       # immutable read view
-    res = snap.execute([Q.version(v1),
-                        Q.record(v1, pk),
-                        Q.range(v1, lo, hi),
-                        Q.evolution(pk)])
-    res[0].value, res[0].stats                 # per-query results/stats
-    res.batch                                  # batch stats (1 round trip)
+    # Write session — the native ingest path: stage a wave of commits,
+    # flush once.  All new chunks and rebuilt chunk maps of the whole
+    # session are committed via ONE multiput (one backend round trip per
+    # shard under ShardedKVS).
+    with rs.writer() as w:
+        v0 = w.init_root({pk: payload, ...})
+        v1 = w.commit([v0], adds={pk: new_payload}, dels=[pk2])
+    # <- one group flush happened here
 
-    # Back-compat wrappers — single-query sessions:
-    records, stats = rs.get_version(v1)
+    # Back-compat wrappers — one-commit sessions that keep the seed's
+    # delta-store batching (flush every `batch_size` versions):
+    v2 = rs.commit([v1], adds={...})
+
+    # Session reads (see api.py): plan a wave, fetch in one round trip/shard
+    snap = rs.snapshot()
+    res = snap.execute([Q.version(v1), Q.record(v1, pk), ...])
 
 Commits only carry the delta ("the system requests only those records from
 the client that have changed").  Deltas accumulate in the delta store and are
-chunked in batches (§4).  ``flush()`` is explicit; with the default
-``RStoreConfig.auto_flush=True`` the facade keeps the seed behaviour of
-flushing before a read, while ``auto_flush=False`` makes reads strictly
-side-effect free (``snapshot()`` then refuses to observe unflushed deltas).
-``build()`` runs the full offline pipeline (sub-chunking when k>1 →
-partitioning → chunk/map writes → projections).
+chunked in batches (§4); commit staging is columnar (one ``add_batch`` per
+commit) and parent-key resolution uses cached sorted key arrays +
+``searchsorted`` instead of rebuilding an O(|version|) Python dict per delta.
+``flush()`` is explicit; with the default ``RStoreConfig.auto_flush=True``
+the facade keeps the seed behaviour of flushing before a read, while
+``auto_flush=False`` makes reads strictly side-effect free (``snapshot()``
+then refuses to observe unflushed deltas).  ``build()`` runs the full offline
+pipeline (sub-chunking when k>1 → partitioning → chunk/map writes →
+projections).
 """
 from __future__ import annotations
 
@@ -39,13 +46,13 @@ import numpy as np
 
 from .chunkstore import build_chunk
 from .index import Projections
-from .kvs import KVS, InMemoryKVS
-from .online import partition_batch
-from .partition import ALGORITHMS, DeltaBaseline
+from .kvs import Backend, InMemoryKVS
+from .online import affected_old_chunks, partition_batch
+from .partition import ALGORITHMS
 from .api import BatchResult, Q, Snapshot
 from .subchunk import (build_subchunks, build_transformed,
                        compressed_subchunk_sizes)
-from .types import Chunk, Partitioning, pack_ck
+from .types import _MAX_PART, Chunk, Partitioning, pack_ck_array
 from .version_graph import VersionGraph
 
 
@@ -68,11 +75,78 @@ class RStoreConfig:
         return {}
 
 
+class WriteSession:
+    """Staged ingest — the write-side mirror of :class:`~repro.core.api.Snapshot`.
+
+    Obtained via :meth:`RStore.writer`.  ``init_root``/``commit`` stage
+    versions in the delta store without flushing; ``close()`` (or context-
+    manager exit) performs ONE group flush: the session's versions are
+    chunked as a single batch and every new chunk + rebuilt chunk map is
+    committed via a single ``multiput`` — one backend write round trip per
+    shard under :class:`~repro.core.kvs.ShardedKVS`, O(shards) instead of
+    the seed's ~2×n_chunks per-blob puts.
+
+    Misuse is loud: only one session may be open per store (the facade
+    wrappers count), and committing after ``close()`` raises.  If the
+    ``with`` body raises, the flush is skipped — staged versions stay in
+    the delta store and the next flush picks them up.
+    """
+
+    def __init__(self, rs: "RStore", flush_on_close: bool = True) -> None:
+        self._rs = rs
+        self._flush_on_close = flush_on_close
+        self._closed = False
+        self.staged: List[int] = []        # vids committed through this session
+
+    # ------------------------------------------------------------- staging
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("WriteSession is closed; open a new writer()")
+
+    def init_root(self, records: Dict[int, bytes]) -> int:
+        self._check_open()
+        vid = self._rs._stage_root(records)
+        self.staged.append(vid)
+        return vid
+
+    def commit(self, parents: Sequence[int], adds: Dict[int, bytes],
+               dels: Iterable[int] = ()) -> int:
+        """Stage a new version as a delta from ``parents[0]`` (extra parents
+        form a merge; their exclusive keys are pulled in per Fig. 4)."""
+        self._check_open()
+        vid = self._rs._stage_commit(parents, adds, dels)
+        self.staged.append(vid)
+        return vid
+
+    # --------------------------------------------------------------- flush
+    def close(self) -> None:
+        """Group-flush the session (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._rs._writer = None
+        if self._flush_on_close:
+            self._rs.flush()
+        else:
+            self._rs._maybe_flush()
+
+    def __enter__(self) -> "WriteSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            # abort: skip the flush, leave staged versions pending
+            self._closed = True
+            self._rs._writer = None
+            return
+        self.close()
+
+
 class RStore:
     def __init__(self, config: Optional[RStoreConfig] = None,
-                 kvs: Optional[KVS] = None) -> None:
+                 kvs: Optional[Backend] = None) -> None:
         self.config = config or RStoreConfig()
-        self.kvs: KVS = kvs if kvs is not None else InMemoryKVS()
+        self.kvs: Backend = kvs if kvs is not None else InMemoryKVS()
         self.graph = VersionGraph()
         self._next_vid = 0
         self.pending: List[int] = []          # delta store (§4): unchunked vids
@@ -87,66 +161,151 @@ class RStore:
         # chunk id -> record ids in *stored order* (chunk maps must preserve
         # the chunk's local record indexing when rebuilt)
         self._chunk_records: Dict[int, np.ndarray] = {}
+        # chunk id -> stored blob size, tracked at write time so
+        # storage_stats() never has to fetch blobs just to size them
+        self._chunk_bytes: Dict[int, int] = {}
+        # version id -> (sorted primary keys, record ids in that order);
+        # memberships are immutable once committed, so entries never go
+        # stale (memory is bounded by total membership size, same order as
+        # the graph's own materialized memberships)
+        self._pk_arrays: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._writer: Optional[WriteSession] = None
+
+    # ------------------------------------------------------------- sessions
+    def writer(self, flush_on_close: bool = True) -> WriteSession:
+        """Open a :class:`WriteSession`.  With the default
+        ``flush_on_close=True`` the session group-flushes everything it
+        staged on close; ``flush_on_close=False`` keeps the delta-store
+        batching (flush only once ``batch_size`` versions accumulated) —
+        the facade wrappers use that to preserve the seed behaviour."""
+        if self._writer is not None and not self._writer._closed:
+            raise RuntimeError(
+                "another WriteSession is already open on this store; close "
+                "it first (one writer per store — commits are serialized)")
+        ws = WriteSession(self, flush_on_close=flush_on_close)
+        self._writer = ws
+        return ws
 
     # ------------------------------------------------------------- ingest
-    def _key_map(self, vid: int) -> Dict[int, int]:
-        rids = self.graph.members(vid)
-        keys = self.graph.store.keys()[rids]
-        return dict(zip(keys.tolist(), rids.tolist()))
+    def _parent_key_arrays(self, vid: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(sorted primary keys, record ids aligned) of ``vid``'s live set —
+        the searchsorted-friendly replacement for the seed's per-commit
+        O(|version|) dict rebuild.  Cached per version (immutable)."""
+        hit = self._pk_arrays.get(vid)
+        if hit is None:
+            rids = self.graph.members(vid)
+            keys = self.graph.store.keys()[rids]
+            order = np.argsort(keys, kind="stable")
+            hit = (keys[order], rids[order])
+            self._pk_arrays[vid] = hit
+        return hit
 
-    def init_root(self, records: Dict[int, bytes]) -> int:
+    def _key_map(self, vid: int) -> Dict[int, int]:
+        """pk -> record id of ``vid``'s live set (back-compat; hot paths use
+        :meth:`_parent_key_arrays` directly)."""
+        skeys, srids = self._parent_key_arrays(vid)
+        return dict(zip(skeys.tolist(), srids.tolist()))
+
+    @staticmethod
+    def _find_in_sorted(sorted_keys: np.ndarray, pks: np.ndarray) -> np.ndarray:
+        """Positions of ``pks`` in ``sorted_keys`` (-1 where absent)."""
+        if len(pks) == 0:
+            return np.empty(0, dtype=np.int64)
+        pos = np.searchsorted(sorted_keys, pks)
+        out = np.full(len(pks), -1, dtype=np.int64)
+        in_range = pos < len(sorted_keys)
+        hit = np.zeros(len(pks), dtype=bool)
+        hit[in_range] = sorted_keys[pos[in_range]] == pks[in_range]
+        out[hit] = pos[hit]
+        return out
+
+    @staticmethod
+    def _check_pk_range(pks: np.ndarray, vid: int) -> None:
+        if len(pks) and (int(pks.min()) < 0 or int(pks.max()) > _MAX_PART):
+            bad = int(pks.min()) if int(pks.min()) < 0 else int(pks.max())
+            raise ValueError(f"composite key out of range: ({bad}, {vid})")
+
+    def _stage_root(self, records: Dict[int, bytes]) -> int:
         vid = self._next_vid
         self._next_vid += 1
-        cks = np.array([pack_ck(pk, vid) for pk in records], dtype=np.int64)
-        sizes = np.array([len(p) for p in records.values()], dtype=np.int64)
+        pks = np.fromiter(records.keys(), dtype=np.int64, count=len(records))
+        self._check_pk_range(pks, vid)
+        cks = pack_ck_array(pks, np.full(len(pks), vid, dtype=np.int64))
+        sizes = np.fromiter((len(p) for p in records.values()),
+                            dtype=np.int64, count=len(records))
         payloads = list(records.values()) if self.config.store_payloads else None
         rids = self.graph.store.add_batch(cks, sizes, payloads)
         self.graph.add_root(vid, rids)
         self._grow_r2c()
         self.pending.append(vid)
-        self._maybe_flush()
         return vid
+
+    def _stage_commit(self, parents: Sequence[int], adds: Dict[int, bytes],
+                      dels: Iterable[int] = ()) -> int:
+        vid = self._next_vid
+        self._next_vid += 1
+        store = self.graph.store
+        skeys, srids = self._parent_key_arrays(parents[0])
+
+        dels = set(dels)
+        del_pks = np.fromiter(dels, dtype=np.int64, count=len(dels))
+        pos = self._find_in_sorted(skeys, del_pks)
+        if (pos < 0).any():
+            missing = int(del_pks[int(np.flatnonzero(pos < 0)[0])])
+            raise KeyError(f"delete of absent key {missing}")
+        del_rid_parts: List[np.ndarray] = [srids[pos]]
+
+        both = dels.intersection(adds)
+        if both:
+            raise ValueError(f"key {next(iter(both))} both added and deleted")
+
+        add_pks = np.fromiter(adds.keys(), dtype=np.int64, count=len(adds))
+        self._check_pk_range(add_pks, vid)
+        cks = pack_ck_array(add_pks, np.full(len(add_pks), vid, dtype=np.int64))
+        sizes = np.fromiter((len(p) for p in adds.values()),
+                            dtype=np.int64, count=len(adds))
+        payloads = (list(adds.values())
+                    if self.config.store_payloads else None)
+        add_rid_parts: List[np.ndarray] = [store.add_batch(cks, sizes, payloads)]
+        superseded = self._find_in_sorted(skeys, add_pks)
+        del_rid_parts.append(srids[superseded[superseded >= 0]])
+
+        # merge parents: pull exclusive keys (Fig. 4 tree conversion).
+        # Earlier merge parents win: a key exclusive to two later parents is
+        # pulled once (the seed silently admitted duplicate live records for
+        # the same pk, leaving phantom records that dels could not remove).
+        pulled_pks = np.empty(0, dtype=np.int64)
+        for other in parents[1:]:
+            okeys, orids = self._parent_key_arrays(other)
+            pull = self._find_in_sorted(skeys, okeys) < 0
+            if len(add_pks):
+                pull &= ~np.isin(okeys, add_pks)
+            if len(del_pks):
+                pull &= ~np.isin(okeys, del_pks)
+            if len(pulled_pks):
+                pull &= ~np.isin(okeys, pulled_pks)
+            add_rid_parts.append(orids[pull])
+            pulled_pks = np.concatenate([pulled_pks, okeys[pull]])
+
+        self.graph.add_version(vid, list(parents),
+                               np.concatenate(add_rid_parts),
+                               np.concatenate(del_rid_parts))
+        self._grow_r2c()
+        self.pending.append(vid)
+        return vid
+
+    # Back-compat wrappers: each is a one-commit write session that keeps
+    # the seed's delta-store batching (flush at batch_size, not per commit).
+    def init_root(self, records: Dict[int, bytes]) -> int:
+        with self.writer(flush_on_close=False) as w:
+            return w.init_root(records)
 
     def commit(self, parents: Sequence[int], adds: Dict[int, bytes],
                dels: Iterable[int] = ()) -> int:
         """Commit a new version as a delta from ``parents[0]`` (extra parents
         form a merge; their exclusive keys are pulled in per Fig. 4)."""
-        vid = self._next_vid
-        self._next_vid += 1
-        pmap = self._key_map(parents[0])
-        store = self.graph.store
-
-        del_rids: List[int] = []
-        dels = set(dels)
-        for pk in dels:
-            if pk not in pmap:
-                raise KeyError(f"delete of absent key {pk}")
-            del_rids.append(pmap[pk])
-
-        add_rids: List[int] = []
-        for pk, payload in adds.items():
-            if pk in dels:
-                raise ValueError(f"key {pk} both added and deleted")
-            ck = pack_ck(pk, vid)
-            rid = store.add(ck, len(payload),
-                            payload if self.config.store_payloads else None)
-            add_rids.append(rid)
-            if pk in pmap:
-                del_rids.append(pmap[pk])     # superseded record
-
-        # merge parents: pull exclusive keys (Fig. 4 tree conversion)
-        for other in parents[1:]:
-            omap = self._key_map(other)
-            for pk, rid in omap.items():
-                if pk not in pmap and pk not in adds and pk not in dels:
-                    add_rids.append(rid)
-
-        self.graph.add_version(vid, list(parents), np.asarray(add_rids),
-                               np.asarray(del_rids))
-        self._grow_r2c()
-        self.pending.append(vid)
-        self._maybe_flush()
-        return vid
+        with self.writer(flush_on_close=False) as w:
+            return w.commit(parents, adds, dels)
 
     def _grow_r2c(self) -> None:
         n = len(self.graph.store)
@@ -156,13 +315,27 @@ class RStore:
             self.r2c = grown
 
     # ------------------------------------------------------------ chunking
+    def _check_no_open_writer(self, what: str) -> None:
+        """Misuse is loud: chunking mid-session would split the open
+        session's one group commit into several multiputs.  close() clears
+        the writer slot before its own flush, so session closes pass."""
+        if self._writer is not None and not self._writer._closed:
+            raise RuntimeError(
+                f"{what} during an open WriteSession would split its group "
+                "commit; close the session instead")
+
     def _maybe_flush(self) -> None:
+        if self._writer is not None and not self._writer._closed:
+            return                    # an open session group-flushes on close
         if len(self.pending) >= self.config.batch_size:
             self.flush()
 
     def flush(self) -> None:
         """Chunk the pending batch (§4 online path; k=1 only — the paper's
-        online algorithm does not cover re-grouping sub-chunks)."""
+        online algorithm does not cover re-grouping sub-chunks) and commit
+        every new chunk + rebuilt map in ONE ``multiput`` (the group
+        commit: one backend write round trip per shard)."""
+        self._check_no_open_writer("flush()")
         if not self.pending:
             return
         if self.config.k > 1:
@@ -178,6 +351,7 @@ class RStore:
                                **self.config.algo_kwargs())
         mask = part.record_to_chunk >= 0
         self.r2c[:len(mask)][mask] = part.record_to_chunk[mask]
+        first_new = self.n_chunks
         self.n_chunks += part.num_chunks
 
         # projections: new versions + affected old chunks
@@ -186,37 +360,43 @@ class RStore:
                                     n_chunks=self.n_chunks)
         self.proj.grow(self.n_chunks)
         keys = self.graph.store.keys()
-        affected_old: set = set()
+        batch_vchunks: List[np.ndarray] = []
         for v in batch:
             vchunks = np.unique(self.r2c[self.graph.members(v)])
             assert (vchunks >= 0).all(), "unplaced record in flushed version"
             self.proj.extend_version(v, vchunks)
-            old = vchunks[vchunks < self.n_chunks - part.num_chunks]
-            affected_old.update(int(c) for c in old)
+            batch_vchunks.append(vchunks)
+        affected_old = affected_old_chunks(batch_vchunks, first_new)
         kc: Dict[int, np.ndarray] = {}
         for c in part.chunks:
             for r in c.record_ids:
                 kc.setdefault(int(keys[r]), []).append(c.chunk_id)  # type: ignore
         self.proj.extend_keys({pk: np.asarray(cs) for pk, cs in kc.items()})
 
-        # write new chunks + rebuild affected old chunk maps (once per batch)
+        # stage new chunks + rebuilt old chunk maps, commit in ONE multiput
         csr = self.graph.record_version_index_csr()
         nv = self.graph.num_versions
         vidx_of = {v: i for i, v in enumerate(self.graph.versions)}
+        writes: List[Tuple[str, bytes]] = []
         for c in part.chunks:
             chunk, cmap = build_chunk(self.graph, c.record_ids, c.chunk_id,
                                       vidx_of, nv, csr)
             self._chunk_records[c.chunk_id] = c.record_ids
-            self.kvs.put(f"chunk/{c.chunk_id}", chunk.to_bytes())
-            self.kvs.put(f"map/{c.chunk_id}", cmap.to_bytes())
+            blob = chunk.to_bytes()
+            self._chunk_bytes[c.chunk_id] = len(blob)
+            writes.append((f"chunk/{c.chunk_id}", blob))
+            writes.append((f"map/{c.chunk_id}", cmap.to_bytes()))
         for cid in affected_old:
+            cid = int(cid)
             _, cmap = build_chunk(self.graph, self._chunk_records[cid], cid,
                                   vidx_of, nv, csr)
-            self.kvs.put(f"map/{cid}", cmap.to_bytes())
+            writes.append((f"map/{cid}", cmap.to_bytes()))
+        self.kvs.multiput(writes)
         self._flushed_versions = self.graph.num_versions
 
     def build(self) -> Partitioning:
         """Full offline build (also the k>1 path)."""
+        self._check_no_open_writer("build()")
         self._build_epoch += 1
         self.pending = []
         cfg = self.config
@@ -252,13 +432,18 @@ class RStore:
         nv = graph.num_versions
         vidx_of = {v: i for i, v in enumerate(graph.versions)}
         self._chunk_records = {}
+        self._chunk_bytes = {}
+        writes: List[Tuple[str, bytes]] = []
         for c in part.chunks:
             chunk, cmap = build_chunk(graph, c.record_ids, c.chunk_id, vidx_of,
                                       nv, csr,
                                       subchunk_groups=sub_groups_of.get(c.chunk_id))
             self._chunk_records[c.chunk_id] = c.record_ids
-            self.kvs.put(f"chunk/{c.chunk_id}", chunk.to_bytes())
-            self.kvs.put(f"map/{c.chunk_id}", cmap.to_bytes())
+            blob = chunk.to_bytes()
+            self._chunk_bytes[c.chunk_id] = len(blob)
+            writes.append((f"chunk/{c.chunk_id}", blob))
+            writes.append((f"map/{c.chunk_id}", cmap.to_bytes()))
+        self.kvs.multiput(writes)      # one group commit, even for rebuilds
         self._flushed_versions = graph.num_versions
         return part
 
@@ -271,6 +456,14 @@ class RStore:
         and unflushed deltas raise — call :meth:`flush` explicitly.
         """
         if self.pending:
+            if self._writer is not None and not self._writer._closed:
+                # flushing here would split the open session's one group
+                # commit into several multiputs behind the caller's back —
+                # misuse is loud, like every other mid-session hazard
+                raise RuntimeError(
+                    f"{len(self.pending)} unflushed version(s) staged by an "
+                    "open WriteSession; close the session (its group flush) "
+                    "before reading")
             if self.config.auto_flush:
                 self.flush()
             else:
@@ -306,20 +499,12 @@ class RStore:
 
     # ------------------------------------------------------------- metrics
     def storage_stats(self) -> Dict[str, int]:
-        """Chunk/index sizes.  Side-effect free on query counters: the sizing
-        multiget is excluded from ``kvs.stats`` by save/restore instead of
-        the seed's destructive ``reset()`` (which wiped whatever the caller
-        was accumulating)."""
-        saved = self.kvs.stats.snapshot()
-        if self.n_chunks:
-            blobs = self.kvs.multiget([f"chunk/{c}" for c in range(self.n_chunks)])
-            stored = sum(len(b) for b in blobs)
-        else:
-            stored = 0
-        self.kvs.stats.restore(saved)
+        """Chunk/index sizes.  ``stored_chunk_bytes`` is tracked
+        incrementally at chunk-write time — the seed multiget every chunk
+        blob just to size it, a full-store read per stats call."""
         out = {
             "n_chunks": self.n_chunks,
-            "stored_chunk_bytes": stored,
+            "stored_chunk_bytes": int(sum(self._chunk_bytes.values())),
             "raw_unique_bytes": int(self.graph.store.sizes.sum()),
         }
         if self.proj is not None:

@@ -1,6 +1,11 @@
 """Backend key-value store abstraction (§2.4).
 
-RStore assumes only get/put/multiget from the backend.  Two implementations:
+RStore assumes only get/put/multiget/multiput from the backend — the
+:class:`Backend` protocol.  Both directions are batched: ``multiget`` is one
+read round trip, ``multiput`` one write round trip (the §2.3 insight — few
+large requests beat many small ones — applied symmetrically; the write side
+is what the group-committing :class:`~repro.core.ingest.WriteSession` rides
+on).  Three implementations:
 
 - :class:`InMemoryKVS` — host dict with request/byte counters and a simple
   latency model (per-query overhead + bandwidth), used to reproduce the §2.3
@@ -8,13 +13,17 @@ RStore assumes only get/put/multiget from the backend.  Two implementations:
 
 - :class:`ShardedDeviceKVS` — the TPU-native realization: a fixed-slot
   ``uint32[n_slots, slot_words]`` table sharded across the JAX mesh's
-  devices; ``multiget`` is ONE jitted batched gather (the chunking insight:
-  few large fetches beat many small ones — the gather's collective traffic
-  scales with span, which the roofline section measures).
+  devices; ``multiget`` is ONE jitted batched gather (the gather's collective
+  traffic scales with span, which the roofline section measures).
+
+- :class:`ShardedKVS` — the *distributed* layer the paper assumes: a router
+  that hash-partitions the keyspace over N inner backends and fans
+  ``multiget``/``multiput`` out as one round trip per shard touched.
 """
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
 
@@ -23,42 +32,75 @@ import numpy as np
 
 @dataclass
 class KVSStats:
-    n_queries: int = 0          # round-trips to the backend
+    n_queries: int = 0          # read round-trips to the backend
     n_values: int = 0           # values fetched
     bytes_fetched: int = 0
+    n_put_queries: int = 0      # write round-trips (each put / multiput)
+    n_values_put: int = 0       # values stored
     bytes_stored: int = 0
 
     def simulated_seconds(self, per_query_s: float = 5e-4,
                           bandwidth_Bps: float = 200e6) -> float:
-        """Cassandra-like cost model: fixed per-request overhead + transfer."""
+        """Cassandra-like read cost model: per-request overhead + transfer."""
         return self.n_queries * per_query_s + self.bytes_fetched / bandwidth_Bps
 
+    def simulated_write_seconds(self, per_query_s: float = 5e-4,
+                                bandwidth_Bps: float = 200e6) -> float:
+        """Same cost model for the write side."""
+        return (self.n_put_queries * per_query_s
+                + self.bytes_stored / bandwidth_Bps)
+
     def reset(self) -> None:
-        self.n_queries = self.n_values = 0
-        self.bytes_fetched = self.bytes_stored = 0
+        self.n_queries = self.n_values = self.bytes_fetched = 0
+        self.n_put_queries = self.n_values_put = self.bytes_stored = 0
 
     def snapshot(self) -> "KVSStats":
         """Copy of the current counters (pair with :meth:`restore` to run
-        bookkeeping traffic — e.g. chunk sizing — without polluting stats a
-        caller is accumulating)."""
+        bookkeeping traffic without polluting stats a caller is
+        accumulating)."""
         return KVSStats(n_queries=self.n_queries, n_values=self.n_values,
                         bytes_fetched=self.bytes_fetched,
+                        n_put_queries=self.n_put_queries,
+                        n_values_put=self.n_values_put,
                         bytes_stored=self.bytes_stored)
 
     def restore(self, saved: "KVSStats") -> None:
         self.n_queries = saved.n_queries
         self.n_values = saved.n_values
         self.bytes_fetched = saved.bytes_fetched
+        self.n_put_queries = saved.n_put_queries
+        self.n_values_put = saved.n_values_put
         self.bytes_stored = saved.bytes_stored
 
+    @staticmethod
+    def merged(parts: Iterable["KVSStats"]) -> "KVSStats":
+        """Aggregate of several counters (e.g. per-shard stats)."""
+        out = KVSStats()
+        for p in parts:
+            out.n_queries += p.n_queries
+            out.n_values += p.n_values
+            out.bytes_fetched += p.bytes_fetched
+            out.n_put_queries += p.n_put_queries
+            out.n_values_put += p.n_values_put
+            out.bytes_stored += p.bytes_stored
+        return out
 
-class KVS(Protocol):
+
+class Backend(Protocol):
+    """What RStore requires of the distributed KV store (§2.4): batched reads
+    AND batched writes, each one round trip per call."""
+
     stats: KVSStats
 
     def put(self, key: str, value: bytes) -> None: ...
     def get(self, key: str) -> bytes: ...
     def multiget(self, keys: Sequence[str]) -> List[bytes]: ...
+    def multiput(self, items: Sequence[Tuple[str, bytes]]) -> None: ...
     def __contains__(self, key: str) -> bool: ...
+
+
+# Back-compat alias: the pre-write-path name for the protocol.
+KVS = Backend
 
 
 class InMemoryKVS:
@@ -67,8 +109,7 @@ class InMemoryKVS:
         self.stats = KVSStats()
 
     def put(self, key: str, value: bytes) -> None:
-        self._d[key] = value
-        self.stats.bytes_stored += len(value)
+        self.multiput([(key, value)])
 
     def get(self, key: str) -> bytes:
         v = self._d[key]
@@ -78,12 +119,26 @@ class InMemoryKVS:
         return v
 
     def multiget(self, keys: Sequence[str]) -> List[bytes]:
-        """One batched round-trip (the chunked design needs only this)."""
+        """One batched round-trip (the chunked design needs only this).
+
+        An empty batch costs nothing: no backend call, no stats."""
+        if not keys:
+            return []
         vs = [self._d[k] for k in keys]
         self.stats.n_queries += 1
         self.stats.n_values += len(vs)
         self.stats.bytes_fetched += sum(len(v) for v in vs)
         return vs
+
+    def multiput(self, items: Sequence[Tuple[str, bytes]]) -> None:
+        """One batched write round-trip (the group-commit primitive)."""
+        if not items:
+            return
+        for k, v in items:
+            self._d[k] = v
+        self.stats.n_put_queries += 1
+        self.stats.n_values_put += len(items)
+        self.stats.bytes_stored += sum(len(v) for _, v in items)
 
     def multiget_naive(self, keys: Sequence[str]) -> List[bytes]:
         """Per-key round-trips — the §2.3 baseline behaviour."""
@@ -96,6 +151,85 @@ class InMemoryKVS:
         return sum(len(v) for v in self._d.values())
 
 
+# ---------------------------------------------------------------- shard router
+class ShardedKVS:
+    """Hash-partitioned router over N inner backends.
+
+    The keyspace is split by a stable hash (crc32 of the key); ``multiget``
+    and ``multiput`` fan out per shard — one inner round trip per shard
+    touched — and results are reassembled in request order.  ``stats`` on the
+    router counts those per-shard round trips (a batch spanning 4 shards is
+    4 round trips: the shards are independent servers); per-shard counters
+    stay on the inner backends (:meth:`shard_stats`).
+    """
+
+    def __init__(self, shards: Sequence[Backend]) -> None:
+        if not shards:
+            raise ValueError("ShardedKVS needs at least one shard")
+        self.shards: List[Backend] = list(shards)
+        self.stats = KVSStats()
+
+    def shard_of(self, key: str) -> int:
+        return zlib.crc32(key.encode()) % len(self.shards)
+
+    # ------------------------------------------------------------------ reads
+    def get(self, key: str) -> bytes:
+        v = self.shards[self.shard_of(key)].get(key)
+        self.stats.n_queries += 1
+        self.stats.n_values += 1
+        self.stats.bytes_fetched += len(v)
+        return v
+
+    def multiget(self, keys: Sequence[str]) -> List[bytes]:
+        if not keys:
+            return []
+        groups: Dict[int, List[int]] = {}
+        for i, k in enumerate(keys):
+            groups.setdefault(self.shard_of(k), []).append(i)
+        out: List[Optional[bytes]] = [None] * len(keys)
+        for s, idxs in groups.items():
+            vals = self.shards[s].multiget([keys[i] for i in idxs])
+            for i, v in zip(idxs, vals):
+                out[i] = v
+        self.stats.n_queries += len(groups)
+        self.stats.n_values += len(keys)
+        self.stats.bytes_fetched += sum(len(v) for v in out)  # type: ignore
+        return out  # type: ignore[return-value]
+
+    # ----------------------------------------------------------------- writes
+    def put(self, key: str, value: bytes) -> None:
+        self.multiput([(key, value)])
+
+    def multiput(self, items: Sequence[Tuple[str, bytes]]) -> None:
+        """One round trip per shard touched — a whole group commit lands in
+        O(shards) backend writes however many chunks it carries."""
+        if not items:
+            return
+        groups: Dict[int, List[Tuple[str, bytes]]] = {}
+        for kv in items:
+            groups.setdefault(self.shard_of(kv[0]), []).append(kv)
+        for s, sub in groups.items():
+            self.shards[s].multiput(sub)
+        self.stats.n_put_queries += len(groups)
+        self.stats.n_values_put += len(items)
+        self.stats.bytes_stored += sum(len(v) for _, v in items)
+
+    # ------------------------------------------------------------------ misc
+    def __contains__(self, key: str) -> bool:
+        return key in self.shards[self.shard_of(key)]
+
+    def shard_stats(self) -> List[KVSStats]:
+        """Per-shard counters, in shard order."""
+        return [s.stats for s in self.shards]
+
+    def aggregate_shard_stats(self) -> KVSStats:
+        return KVSStats.merged(self.shard_stats())
+
+    def total_stored_bytes(self) -> int:
+        return sum(s.total_stored_bytes() for s in self.shards
+                   if hasattr(s, "total_stored_bytes"))
+
+
 class ShardedDeviceKVS:
     """Fixed-slot store living as a device-sharded JAX array.
 
@@ -103,7 +237,10 @@ class ShardedDeviceKVS:
     consecutive slots.  ``multiget`` issues a single ``jnp.take`` over the
     sharded table — on a real mesh this is a batched all-gather whose volume
     is span × slot size.  Host-side writes are buffered and flushed in one
-    device_put (ingest is batched, mirroring §4's delta store).
+    device_put; ``multiput`` stages a whole group commit as one write round
+    trip (ingest is batched, mirroring §4's delta store).  Freed extents
+    (relocated or shrunk values) go on a first-fit free list so overwrites
+    never leak slots.
     """
 
     def __init__(self, slot_bytes: int = 1 << 16, n_slots: int = 1024,
@@ -119,17 +256,35 @@ class ShardedDeviceKVS:
         self._host = np.zeros((n_slots, self.slot_words), dtype=np.uint32)
         self._dirty = True
         self._next_slot = 0
+        self._free: List[Tuple[int, int]] = []   # (slot, n) reclaimed extents
         self._dir: Dict[str, Tuple[int, int, int]] = {}  # key -> (slot, n, len)
         self.stats = KVSStats()
         self._gather = jax.jit(lambda t, idx: jnp.take(t, idx, axis=0))
 
     # ------------------------------------------------------------------ put
     def put(self, key: str, value: bytes) -> None:
+        self.multiput([(key, value)])
+
+    def multiput(self, items: Sequence[Tuple[str, bytes]]) -> None:
+        """Stage a batch of writes; the (deferred) device sync is one
+        transfer however many values the batch carries."""
+        if not items:
+            return
+        for k, v in items:
+            self._store_one(k, v)
+        self.stats.n_put_queries += 1
+        self.stats.n_values_put += len(items)
+        self.stats.bytes_stored += sum(len(v) for _, v in items)
+
+    def _store_one(self, key: str, value: bytes) -> None:
         n = max(1, math.ceil(len(value) / self.slot_bytes))
         if key in self._dir:
             slot, old_n, _ = self._dir[key]
-            if old_n < n:                       # relocate
+            if old_n < n:                       # relocate; reclaim old extent
+                self._release(slot, old_n)
                 slot = self._alloc(n)
+            elif old_n > n:                     # shrink in place; free tail
+                self._release(slot + n, old_n - n)
         else:
             slot = self._alloc(n)
         buf = np.zeros(n * self.slot_words, dtype=np.uint32)
@@ -138,15 +293,51 @@ class ShardedDeviceKVS:
         self._host[slot:slot + n] = buf.reshape(n, self.slot_words)
         self._dir[key] = (slot, n, len(value))
         self._dirty = True
-        self.stats.bytes_stored += len(value)
+
+    def _release(self, slot: int, n: int) -> None:
+        """Return an extent to the free list, coalescing adjacent extents —
+        without merging, a repeatedly-growing value would fragment its old
+        extents into ever-too-small holes and never reuse them.  An extent
+        ending at the high-water mark shrinks it instead."""
+        if n <= 0:
+            return
+        self._free.append((slot, n))
+        self._free.sort()
+        merged: List[Tuple[int, int]] = []
+        for s, m in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == s:
+                merged[-1] = (merged[-1][0], merged[-1][1] + m)
+            else:
+                merged.append((s, m))
+        while merged and merged[-1][0] + merged[-1][1] == self._next_slot:
+            self._next_slot = merged[-1][0]
+            merged.pop()
+        self._free = merged
 
     def _alloc(self, n: int) -> int:
+        # first fit over the free list before bumping the high-water mark
+        for i, (slot, m) in enumerate(self._free):
+            if m >= n:
+                if m == n:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (slot + n, m - n)
+                return slot
         slot = self._next_slot
         self._next_slot += n
         while self._next_slot > len(self._host):
             self._host = np.concatenate(
                 [self._host, np.zeros_like(self._host)], axis=0)
         return slot
+
+    @property
+    def free_slots(self) -> int:
+        """Reclaimed-but-unreused slots (leak detector for tests)."""
+        return sum(m for _, m in self._free)
+
+    @property
+    def high_water_slots(self) -> int:
+        return self._next_slot
 
     def _sync(self):
         if self._dirty or self._table is None:
@@ -165,10 +356,11 @@ class ShardedDeviceKVS:
 
     # ------------------------------------------------------------------ get
     def multiget(self, keys: Sequence[str]) -> List[bytes]:
+        if not keys:                      # empty batch: no gather, no stats
+            return []
         table = self._sync()
         metas = [self._dir[k] for k in keys]
-        idx = np.concatenate([np.arange(s, s + n) for s, n, _ in metas]) \
-            if metas else np.zeros(0, np.int64)
+        idx = np.concatenate([np.arange(s, s + n) for s, n, _ in metas])
         rows = np.asarray(self._gather(table, self._jnp.asarray(idx)))
         out: List[bytes] = []
         off = 0
@@ -185,3 +377,6 @@ class ShardedDeviceKVS:
 
     def __contains__(self, key: str) -> bool:
         return key in self._dir
+
+    def total_stored_bytes(self) -> int:
+        return sum(ln for _, _, ln in self._dir.values())

@@ -7,7 +7,9 @@ version of the configured algorithm restricted to the batch's *new* records:
 previously chunked records are never re-partitioned (the paper defers
 re-partitioning to future work).  Chunk maps of affected old chunks are
 rebuilt from the in-memory index and rewritten once per batch — the paper's
-"recreate from scratch instead of fetch+update" trick.
+"recreate from scratch instead of fetch+update" trick — and the whole
+batch's writes (new chunks + rebuilt maps) are group-committed by the
+caller in one ``multiput`` per backend shard.
 """
 from __future__ import annotations
 
@@ -22,6 +24,19 @@ from .types import Chunk, Partitioning
 from .version_graph import VersionGraph
 
 _VIRTUAL_ROOT = -1
+
+
+def affected_old_chunks(batch_version_chunks: Sequence[np.ndarray],
+                        first_new_chunk: int) -> np.ndarray:
+    """Pre-existing chunks touched by the batch's versions (their chunk maps
+    gained version-membership bits and must be rebuilt).  Takes the
+    per-version chunk-id arrays the flush already computed for its
+    projections — one vectorized unique instead of a per-version Python
+    set union."""
+    if not batch_version_chunks:
+        return np.empty(0, dtype=np.int64)
+    cs = np.unique(np.concatenate(list(batch_version_chunks)))
+    return cs[(cs >= 0) & (cs < first_new_chunk)]
 
 
 class _BatchView:

@@ -32,10 +32,12 @@ class RecordStore:
         # access is O(N) and turns per-record callers quadratic
         self._cks_arr: Optional[np.ndarray] = None
         self._sizes_arr: Optional[np.ndarray] = None
+        self._keys_arr: Optional[np.ndarray] = None
 
     def _invalidate(self) -> None:
         self._cks_arr = None
         self._sizes_arr = None
+        self._keys_arr = None
 
     def __len__(self) -> int:
         return len(self._cks)
@@ -89,8 +91,11 @@ class RecordStore:
         return self._sizes[rid]
 
     def keys(self) -> np.ndarray:
-        """Primary keys per record id."""
-        return unpack_ck_array(self.cks)[0]
+        """Primary keys per record id (cached: this sits on the commit and
+        flush hot paths, and unpacking is O(N))."""
+        if self._keys_arr is None or len(self._keys_arr) != len(self._cks):
+            self._keys_arr = unpack_ck_array(self.cks)[0]
+        return self._keys_arr
 
     def origin_versions(self) -> np.ndarray:
         return unpack_ck_array(self.cks)[1]

@@ -1,4 +1,4 @@
-"""Production mesh construction.
+"""Production mesh construction + mesh-aware KVS shard placement.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state.  Single pod: 16×16 = 256 chips,
@@ -6,6 +6,8 @@ axes (data, model).  Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model);
 the pod axis folds into data-parallel/FSDP sharding via the default rules.
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 from jax.sharding import Mesh
@@ -32,3 +34,33 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
     """Small mesh for local smoke runs (1 device by default)."""
     return _make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_sharded_backend(n_shards: int = 4, mesh: Mesh | None = None,
+                         slot_bytes: int = 1 << 16, n_slots: int = 1024):
+    """Mesh-aware shard placement for the store backend.
+
+    Returns a :class:`repro.core.kvs.ShardedKVS` router over ``n_shards``
+    :class:`repro.core.kvs.ShardedDeviceKVS` tables.  With a mesh, each
+    shard's slot table is pinned to its own round-robin slice of the mesh's
+    devices (a strided 1-axis sub-mesh), so a group commit's per-shard
+    ``multiput`` and a session read's per-shard ``multiget`` land on
+    disjoint device sets.  With fewer devices than shards (CPU smoke runs)
+    slices wrap; with no mesh each shard is still a device-table KVS, just
+    placed on the default device (use ``ShardedKVS([InMemoryKVS()] * n)``
+    for a host-only backend).
+    """
+    from repro.core.kvs import ShardedDeviceKVS, ShardedKVS
+
+    if mesh is None:
+        return ShardedKVS([ShardedDeviceKVS(slot_bytes, n_slots)
+                           for _ in range(n_shards)])
+    devs = mesh.devices.reshape(-1)
+    shards = []
+    for i in range(n_shards):
+        group = devs[i::n_shards]
+        if len(group) == 0:                    # more shards than devices
+            group = devs[i % len(devs):i % len(devs) + 1]
+        sub = Mesh(np.asarray(group), ("kv",))
+        shards.append(ShardedDeviceKVS(slot_bytes, n_slots, mesh=sub))
+    return ShardedKVS(shards)

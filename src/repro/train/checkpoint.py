@@ -15,6 +15,10 @@ forks form the version DAG.  Queries map onto training operations:
 
 The commit path is asynchronous-friendly: deltas land in RStore's delta store
 (host) and are chunked per batch off the training step's critical path (§4).
+``commit_many`` stages a whole run segment (e.g. every step of an
+accumulation window) through one :class:`repro.core.WriteSession`: all of
+its chunk/map writes reach the backend as one group commit — one write
+round trip per shard under ``ShardedKVS``.
 """
 from __future__ import annotations
 
@@ -79,23 +83,30 @@ class VersionedCheckpointer:
         for i in range(n):
             yield i, raw[i * self.block_bytes:(i + 1) * self.block_bytes]
 
-    def commit(self, state, parents: Sequence[int] = (),
-               tag: str = "") -> int:
-        """Commit a pytree as a new version derived from ``parents``.
+    def _delta_of(self, state, parents: Sequence[int],
+                  parent_payload: Optional[Dict[int, bytes]] = None):
+        """(adds, dels, metas, child_payload) for committing ``state``
+        against ``parents``.
 
-        Only blocks whose bytes differ from the first parent are written —
-        the delta the paper's ingest path expects."""
+        Only blocks whose bytes differ from the first parent are added —
+        the delta the paper's ingest path expects.  ``parent_payload``
+        (pk -> bytes of the parent's live blocks) is resolved from the
+        store when not given; chained callers pass the previous state's
+        returned ``child_payload`` so a K-step chain does O(K·delta) work,
+        not K full key-map/payload rebuilds."""
         flat = jax.tree_util.tree_flatten_with_path(state)[0]
         metas: Dict[str, TensorMeta] = {}
         adds: Dict[int, bytes] = {}
         all_keys: set = set()
-        parent_meta = self.meta.get(parents[0]) if parents else None
-        parent_payload: Dict[int, bytes] = {}
-        if parents:
-            # compare against the parent's live records
-            pm = self.rs._key_map(parents[0])
-            store = self.rs.graph.store
-            parent_payload = {pk: store.payload(rid) for pk, rid in pm.items()}
+        if parent_payload is None:
+            parent_payload = {}
+            if parents:
+                # compare against the parent's live records
+                pm = self.rs._key_map(parents[0])
+                store = self.rs.graph.store
+                parent_payload = {pk: store.payload(rid)
+                                  for pk, rid in pm.items()}
+        child_payload: Dict[int, bytes] = {}
 
         for path, leaf in flat:
             pstr = _path_str(path)
@@ -109,20 +120,56 @@ class VersionedCheckpointer:
                 all_keys.add(pk)
                 self._key_to_block[pk] = (pstr, bi)
                 keys.append(pk)
+                child_payload[pk] = blob
                 if parent_payload.get(pk) != blob:
                     adds[pk] = blob
             metas[pstr] = TensorMeta(pstr, tuple(arr.shape), str(arr.dtype),
                                      len(keys), keys)
+        dels = [pk for pk in parent_payload if pk not in all_keys]
+        return adds, dels, metas, child_payload
 
+    def _commit_into(self, writer, state, parents: Sequence[int],
+                     tag: str = "",
+                     parent_payload: Optional[Dict[int, bytes]] = None):
+        adds, dels, metas, child_payload = self._delta_of(
+            state, parents, parent_payload)
         if not parents:
-            vid = self.rs.init_root(adds)
+            vid = writer.init_root(adds)
         else:
-            dels = [pk for pk in parent_payload if pk not in all_keys]
-            vid = self.rs.commit(list(parents), adds=adds, dels=dels)
+            vid = writer.commit(list(parents), adds=adds, dels=dels)
         self.meta[vid] = metas
         if self._root is None:
             self._root = vid
-        return vid
+        return vid, child_payload
+
+    def commit(self, state, parents: Sequence[int] = (),
+               tag: str = "") -> int:
+        """Commit a pytree as a new version derived from ``parents`` (a
+        one-commit write session; flushing follows the store's batching)."""
+        with self.rs.writer(flush_on_close=False) as w:
+            return self._commit_into(w, state, parents, tag)[0]
+
+    def commit_many(self, states: Sequence, parents: Sequence[int] = (),
+                    tag: str = "") -> List[int]:
+        """Commit a chain of pytree states in ONE write session.
+
+        Each state's parent is the previous one (the first hangs off
+        ``parents``); the session group-flushes on exit, so the whole
+        chain's chunks and maps cost one backend write round trip per
+        shard.  The parent payload map is carried forward along the chain
+        instead of rebuilt per commit."""
+        if not states:      # don't open (and group-flush) a writer for a no-op
+            return []
+        vids: List[int] = []
+        with self.rs.writer() as w:
+            chain = list(parents)
+            carried: Optional[Dict[int, bytes]] = None
+            for state in states:
+                vid, carried = self._commit_into(w, state, tuple(chain), tag,
+                                                 parent_payload=carried)
+                chain = [vid]
+                vids.append(vid)
+        return vids
 
     # -------------------------------------------------------------- restore
     def restore(self, vid: int, like=None):

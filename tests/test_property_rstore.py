@@ -7,6 +7,7 @@ from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
 from repro.core import RStore, RStoreConfig
+from repro.core.kvs import InMemoryKVS, ShardedKVS
 
 
 @st.composite
@@ -28,6 +29,9 @@ def workload(draw):
         "k": draw(st.sampled_from([1, 3])),
         "batch": draw(st.integers(1, 6)),
         "capacity": draw(st.sampled_from([256, 1024, 4096])),
+        # backend: single in-memory store or the hash-sharded router —
+        # results must be identical either way
+        "n_shards": draw(st.sampled_from([0, 2, 4])),
         "ops": ops,
         "seed": draw(st.integers(0, 2**31 - 1)),
     }
@@ -43,8 +47,10 @@ def test_random_workload_queries_exact(w):
         return rng.integers(0, 256, int(rng.integers(16, 96)),
                             dtype=np.uint8).tobytes()
 
+    kvs = (InMemoryKVS() if w["n_shards"] == 0 else
+           ShardedKVS([InMemoryKVS() for _ in range(w["n_shards"])]))
     rs = RStore(RStoreConfig(algorithm=w["algorithm"], capacity=w["capacity"],
-                             k=w["k"], batch_size=w["batch"]))
+                             k=w["k"], batch_size=w["batch"]), kvs=kvs)
     vids = [rs.init_root({pk: pay() for pk in range(12)})]
 
     for op in w["ops"]:
