@@ -11,8 +11,8 @@ import time
 
 
 def main() -> None:
-    from . import (bench_batched_query, bench_chunksize, bench_fig8_span,
-                   bench_fig9_beta, bench_fig10_compression,
+    from . import (bench_batched_query, bench_chunksize, bench_compaction,
+                   bench_fig8_span, bench_fig9_beta, bench_fig10_compression,
                    bench_fig11_query, bench_fig12_scaling, bench_fig13_online,
                    bench_table1, bench_write_path)
 
@@ -25,6 +25,7 @@ def main() -> None:
         ("fig11_query", bench_fig11_query.run),
         ("batched_query", bench_batched_query.run),
         ("write_path", bench_write_path.run),
+        ("compaction", bench_compaction.run),
         ("fig12_scaling", bench_fig12_scaling.run),
         ("fig13_online", bench_fig13_online.run),
     ]

@@ -1,6 +1,9 @@
 """RStore core: the paper's contribution — a multi-version document store
 layered over a distributed key-value store."""
 from .api import (BatchResult, Q, Query, QueryResult, QueryStats, Snapshot)
+from .compact import (CompactionReport, Compactor, LayoutHealth,
+                      RetentionPolicy, keep_all, keep_last, keep_tagged,
+                      measure_layout)
 from .datagen import PAPER_DATASETS, DatasetSpec, dataset_stats, generate
 from .ingest import RStore, RStoreConfig, WriteSession
 from .kvs import (Backend, InMemoryKVS, KVSStats, ShardedDeviceKVS,
@@ -15,4 +18,6 @@ __all__ = [
     "Q", "Query", "QueryResult", "QueryStats", "BatchResult", "Snapshot",
     "WriteSession", "Backend", "InMemoryKVS", "KVSStats", "ShardedKVS",
     "ShardedDeviceKVS",
+    "Compactor", "CompactionReport", "LayoutHealth", "RetentionPolicy",
+    "keep_all", "keep_last", "keep_tagged", "measure_layout",
 ]

@@ -158,7 +158,11 @@ class Snapshot:
 
     def __init__(self, graph: VersionGraph, proj: Projections,
                  kvs: Backend, epoch: Optional[int] = None,
-                 current_epoch: Optional[Callable[[], int]] = None) -> None:
+                 current_epoch: Optional[Callable[[], int]] = None,
+                 layout_epoch: Optional[int] = None,
+                 current_layout_epoch: Optional[Callable[[], int]] = None,
+                 repin: Optional[Callable[[], Tuple[Projections, int]]] = None,
+                 ) -> None:
         self.graph = graph
         self.proj = proj
         self.kvs = kvs
@@ -170,6 +174,13 @@ class Snapshot:
         # invalidate snapshots and don't bump the epoch.
         self._epoch = epoch
         self._current_epoch = current_epoch
+        # layout-epoch guard: a compaction pass rewrites *some* chunks and
+        # deletes their old keys, but preserves the logical content of every
+        # retained version — so a stale snapshot is re-pinnable via
+        # :meth:`refresh` instead of dead like after a build()
+        self._layout_epoch = layout_epoch
+        self._current_layout_epoch = current_layout_epoch
+        self._repin = repin
 
     def _check_fresh(self) -> None:
         if (self._epoch is not None and self._current_epoch is not None
@@ -177,6 +188,30 @@ class Snapshot:
             raise RuntimeError(
                 "snapshot invalidated by a full rebuild (build() or a k>1 "
                 "flush repartitions chunk storage); take a new snapshot()")
+        if (self._layout_epoch is not None
+                and self._current_layout_epoch is not None
+                and self._current_layout_epoch() != self._layout_epoch):
+            raise RuntimeError(
+                "a compaction pass re-partitioned chunk storage under this "
+                "snapshot; call snapshot.refresh() to re-pin (compaction "
+                "preserves the logical content of retained versions)")
+
+    def refresh(self) -> "Snapshot":
+        """Re-pin to the store's current physical layout after a compaction
+        pass.  Compaction never changes what a retained version contains,
+        so this is safe and cheap — unlike a full ``build()``, after which
+        only a new ``snapshot()`` helps (and this raises)."""
+        if (self._epoch is not None and self._current_epoch is not None
+                and self._current_epoch() != self._epoch):
+            raise RuntimeError(
+                "snapshot invalidated by a full rebuild (build() or a k>1 "
+                "flush repartitions chunk storage); take a new snapshot()")
+        if self._repin is None:
+            raise RuntimeError("snapshot is not attached to a store; "
+                               "take a new snapshot()")
+        self.proj, self._layout_epoch = self._repin()
+        self._vidx = {v: i for i, v in enumerate(self.graph.versions)}
+        return self
 
     # ---------------------------------------------------------------- plan
     def plan(self, queries: Sequence[Query]) -> List[np.ndarray]:
@@ -191,6 +226,10 @@ class Snapshot:
         anding: List[Tuple[int, np.ndarray]] = []
         anding_pos: List[int] = []
         for i, q in enumerate(queries):
+            if q.vid is not None and self.graph.is_retired(q.vid):
+                raise KeyError(
+                    f"version {q.vid} was retired by a retention policy; "
+                    "its content is no longer queryable")
             if q.kind == "version":
                 cands[i] = self.proj.chunks_for_version(q.vid)
             elif q.kind == "evolution":
@@ -241,6 +280,21 @@ class Snapshot:
                 fetched[int(cid)] = (StoredChunk.from_bytes(cb),
                                      ChunkMap.from_bytes(mb),
                                      len(cb) + len(mb))
+
+        # retention-aware evolution: with retired versions around, a kept
+        # chunk may still hold record copies reachable from no retained
+        # version; their chunk-map bitmap rows tell us (no retained bit set)
+        # and they are filtered out of Q3 results
+        self._retained_bits = None
+        if self.graph.has_retired():
+            order = self.graph.versions
+            idx = np.asarray([i for i, v in enumerate(order)
+                              if not self.graph.is_retired(v)], dtype=np.int64)
+            bits = np.zeros((len(order) + 31) // 32, dtype=np.uint32)
+            if len(idx):
+                np.bitwise_or.at(bits, idx // 32,
+                                 np.uint32(1) << (idx % 32).astype(np.uint32))
+            self._retained_bits = bits
 
         # shared extraction caches: decode each chunk's payloads once and
         # slice each (chunk, version) membership once, however many queries
@@ -320,10 +374,16 @@ class Snapshot:
 
         if q.kind == "evolution":
             evo: List[Tuple[int, bytes]] = []
+            retained_bits = getattr(self, "_retained_bits", None)
             for c in cand:
                 cid = int(c)
                 cmap = fetched[cid][1]
                 sel = np.flatnonzero((cmap.cks >> 32) == q.pk)
+                if retained_bits is not None and len(sel):
+                    w = min(cmap.bitmap.shape[1], len(retained_bits))
+                    alive = (cmap.bitmap[sel, :w]
+                             & retained_bits[:w]).any(axis=1)
+                    sel = sel[alive]
                 if len(sel) == 0:
                     stats.irrelevant_chunks += 1
                     continue

@@ -77,8 +77,14 @@ class Projections:
     # -------------------------------------------------------------- building
     @staticmethod
     def build(graph: VersionGraph, part: Partitioning) -> "Projections":
+        """Build both projections from a record→chunk map.  Unplaced records
+        (``r2c == -1``: retention garbage dropped by compaction or a
+        retention-aware rebuild) are simply absent from the index."""
         r2c = part.record_to_chunk
-        vc = {v: np.unique(r2c[m]) for v, m in graph.memberships().items()}
+        vc = {}
+        for v, m in graph.memberships().items():
+            cs_v = np.unique(r2c[m])
+            vc[v] = cs_v[cs_v >= 0]
         keys = graph.store.keys()
         kc: Dict[int, np.ndarray] = {}
         order = np.argsort(keys, kind="stable")
@@ -87,7 +93,10 @@ class Projections:
         bounds = np.flatnonzero(np.r_[True, ks[1:] != ks[:-1], True])
         for i in range(len(bounds) - 1):
             lo, hi = bounds[i], bounds[i + 1]
-            kc[int(ks[lo])] = np.unique(cs[lo:hi])
+            ids = np.unique(cs[lo:hi])
+            ids = ids[ids >= 0]
+            if len(ids):
+                kc[int(ks[lo])] = ids
         return Projections(version_chunks=vc, key_chunks=kc,
                            n_chunks=part.num_chunks)
 
@@ -184,6 +193,14 @@ class Projections:
     # ------------------------------------------------------ online updates
     def extend_version(self, vid: int, chunk_ids: np.ndarray) -> None:
         self.version_chunks[vid] = np.unique(chunk_ids)
+
+    def drop_versions(self, vids: Iterable[int]) -> None:
+        """Retention: retired versions leave the version→chunks projection
+        so queries against them fail loudly at plan time.  Key postings are
+        left alone — they are lossy by design, and compaction rebuilds them
+        when the dead chunks actually go away."""
+        for v in vids:
+            self.version_chunks.pop(v, None)
 
     def extend_keys(self, pk_to_chunks: Dict[int, np.ndarray]) -> None:
         for pk, cs in pk_to_chunks.items():

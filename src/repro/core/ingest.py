@@ -45,6 +45,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .chunkstore import build_chunk
+from .compact import CompactionReport, Compactor, RetentionPolicy
 from .index import Projections
 from .kvs import Backend, InMemoryKVS
 from .online import affected_old_chunks, partition_batch
@@ -158,6 +159,9 @@ class RStore:
         # bumped on every full build(): existing snapshots' chunk ids then
         # point at repartitioned storage, so they must fail loudly
         self._build_epoch = 0
+        # bumped by every compaction pass: content is preserved, so open
+        # snapshots re-pin via snapshot.refresh() instead of dying
+        self._layout_epoch = 0
         # chunk id -> record ids in *stored order* (chunk maps must preserve
         # the chunk's local record indexing when rebuilt)
         self._chunk_records: Dict[int, np.ndarray] = {}
@@ -330,6 +334,25 @@ class RStore:
         if len(self.pending) >= self.config.batch_size:
             self.flush()
 
+    def _stage_chunk_writes(self, chunks, vidx_of: Dict[int, int], nv: int,
+                            csr, sub_groups_of: Optional[Dict] = None,
+                            ) -> List[Tuple[str, bytes]]:
+        """Build the physical blobs for ``chunks``, record them in the
+        chunk bookkeeping, and return the staged ``(key, blob)`` write list
+        — shared by flush(), build(), and the compactor so the key layout
+        and size accounting can never diverge between the three paths."""
+        writes: List[Tuple[str, bytes]] = []
+        for c in chunks:
+            chunk, cmap = build_chunk(
+                self.graph, c.record_ids, c.chunk_id, vidx_of, nv, csr,
+                subchunk_groups=(sub_groups_of or {}).get(c.chunk_id))
+            self._chunk_records[c.chunk_id] = c.record_ids
+            blob = chunk.to_bytes()
+            self._chunk_bytes[c.chunk_id] = len(blob)
+            writes.append((f"chunk/{c.chunk_id}", blob))
+            writes.append((f"map/{c.chunk_id}", cmap.to_bytes()))
+        return writes
+
     def flush(self) -> None:
         """Chunk the pending batch (§4 online path; k=1 only — the paper's
         online algorithm does not cover re-grouping sub-chunks) and commit
@@ -377,15 +400,7 @@ class RStore:
         csr = self.graph.record_version_index_csr()
         nv = self.graph.num_versions
         vidx_of = {v: i for i, v in enumerate(self.graph.versions)}
-        writes: List[Tuple[str, bytes]] = []
-        for c in part.chunks:
-            chunk, cmap = build_chunk(self.graph, c.record_ids, c.chunk_id,
-                                      vidx_of, nv, csr)
-            self._chunk_records[c.chunk_id] = c.record_ids
-            blob = chunk.to_bytes()
-            self._chunk_bytes[c.chunk_id] = len(blob)
-            writes.append((f"chunk/{c.chunk_id}", blob))
-            writes.append((f"map/{c.chunk_id}", cmap.to_bytes()))
+        writes = self._stage_chunk_writes(part.chunks, vidx_of, nv, csr)
         for cid in affected_old:
             cid = int(cid)
             _, cmap = build_chunk(self.graph, self._chunk_records[cid], cid,
@@ -431,21 +446,67 @@ class RStore:
         csr = graph.record_version_index_csr()
         nv = graph.num_versions
         vidx_of = {v: i for i, v in enumerate(graph.versions)}
+        old_ids = set(self._chunk_records)
         self._chunk_records = {}
         self._chunk_bytes = {}
-        writes: List[Tuple[str, bytes]] = []
-        for c in part.chunks:
-            chunk, cmap = build_chunk(graph, c.record_ids, c.chunk_id, vidx_of,
-                                      nv, csr,
-                                      subchunk_groups=sub_groups_of.get(c.chunk_id))
-            self._chunk_records[c.chunk_id] = c.record_ids
-            blob = chunk.to_bytes()
-            self._chunk_bytes[c.chunk_id] = len(blob)
-            writes.append((f"chunk/{c.chunk_id}", blob))
-            writes.append((f"map/{c.chunk_id}", cmap.to_bytes()))
+        writes = self._stage_chunk_writes(part.chunks, vidx_of, nv, csr,
+                                          sub_groups_of)
         self.kvs.multiput(writes)      # one group commit, even for rebuilds
+        # GC: chunk ids of the previous layout that the rebuild did not
+        # reuse would otherwise stay in the KVS forever (a rebuild can
+        # shrink the chunk count — especially after retention pruning)
+        stale = sorted(old_ids - set(self._chunk_records))
+        self.kvs.multidelete(
+            [k for c in stale for k in (f"chunk/{c}", f"map/{c}")])
         self._flushed_versions = graph.num_versions
         return part
+
+    # -------------------------------------------------- retention/compaction
+    def retain(self, policy: RetentionPolicy) -> List[int]:
+        """Apply a retention policy: versions outside it are *retired* —
+        pruned from the version graph and the version→chunks projection, so
+        queries against them fail loudly.  Their record copies stay in
+        storage as garbage until the next :meth:`compact` pass physically
+        reclaims them.  Returns the newly retired version ids.
+        """
+        self._check_no_open_writer("retain()")
+        if self.pending:
+            if self.config.auto_flush:
+                self.flush()
+            else:
+                raise RuntimeError(
+                    f"{len(self.pending)} unflushed version(s); retention "
+                    "works on the flushed graph — call flush() first")
+        retained = set(policy.resolve(self.graph))
+        to_retire = [v for v in self.graph.retained_versions()
+                     if v not in retained]
+        if not to_retire:
+            return []
+        self.graph.retire(to_retire)
+        if self.proj is not None:
+            self.proj.drop_versions(to_retire)
+        for v in to_retire:
+            self._pk_arrays.pop(v, None)
+        return to_retire
+
+    def compact(self, **compactor_kw) -> CompactionReport:
+        """Run one background compaction pass (see
+        :class:`~repro.core.compact.Compactor`): rewrite fragmented /
+        low-liveness chunks through the configured partition algorithm in
+        ONE group commit and GC the superseded keys in ONE ``multidelete``
+        — each one backend round trip per shard touched.  Bumps the layout
+        epoch; open snapshots re-pin with ``snapshot.refresh()``.
+
+        Exception: with ``k > 1`` (sub-chunk compression) the pass falls
+        back to a retention-aware full :meth:`build` — the online algorithm
+        cannot re-group sub-chunks — which, like every rebuild, *hard*
+        invalidates open snapshots (``refresh()`` raises; take a new
+        ``snapshot()``)."""
+        return Compactor(self, **compactor_kw).run_pass()
+
+    @property
+    def layout_epoch(self) -> int:
+        return self._layout_epoch
 
     # ------------------------------------------------------------- queries
     def snapshot(self) -> Snapshot:
@@ -473,7 +534,10 @@ class RStore:
         assert self.proj is not None, "no data ingested"
         return Snapshot(self.graph, self.proj, self.kvs,
                         epoch=self._build_epoch,
-                        current_epoch=lambda: self._build_epoch)
+                        current_epoch=lambda: self._build_epoch,
+                        layout_epoch=self._layout_epoch,
+                        current_layout_epoch=lambda: self._layout_epoch,
+                        repin=lambda: (self.proj, self._layout_epoch))
 
     def execute(self, queries) -> "BatchResult":
         """Run a batch of queries against a fresh snapshot (convenience)."""
@@ -503,7 +567,10 @@ class RStore:
         incrementally at chunk-write time — the seed multiget every chunk
         blob just to size it, a full-store read per stats call."""
         out = {
-            "n_chunks": self.n_chunks,
+            # stored chunks, not the high-water id counter: after a
+            # compaction pass the id space is sparse (old ids deleted, new
+            # ones appended) but this stays the physical chunk count
+            "n_chunks": len(self._chunk_records),
             "stored_chunk_bytes": int(sum(self._chunk_bytes.values())),
             "raw_unique_bytes": int(self.graph.store.sizes.sum()),
         }

@@ -1,11 +1,13 @@
 """Backend key-value store abstraction (§2.4).
 
-RStore assumes only get/put/multiget/multiput from the backend — the
-:class:`Backend` protocol.  Both directions are batched: ``multiget`` is one
-read round trip, ``multiput`` one write round trip (the §2.3 insight — few
-large requests beat many small ones — applied symmetrically; the write side
-is what the group-committing :class:`~repro.core.ingest.WriteSession` rides
-on).  Three implementations:
+RStore assumes only get/put/multiget/multiput/multidelete from the backend —
+the :class:`Backend` protocol.  All directions are batched: ``multiget`` is
+one read round trip, ``multiput`` one write round trip (the §2.3 insight —
+few large requests beat many small ones — applied symmetrically; the write
+side is what the group-committing :class:`~repro.core.ingest.WriteSession`
+rides on), and ``multidelete`` one round trip reclaiming a batch of
+superseded keys (what :class:`~repro.core.compact.Compactor` GC rides on).
+Three implementations:
 
 - :class:`InMemoryKVS` — host dict with request/byte counters and a simple
   latency model (per-query overhead + bandwidth), used to reproduce the §2.3
@@ -38,6 +40,12 @@ class KVSStats:
     n_put_queries: int = 0      # write round-trips (each put / multiput)
     n_values_put: int = 0       # values stored
     bytes_stored: int = 0
+    n_delete_queries: int = 0   # delete round-trips (each delete / multidelete)
+    n_keys_deleted: int = 0     # keys removed
+
+    _FIELDS = ("n_queries", "n_values", "bytes_fetched", "n_put_queries",
+               "n_values_put", "bytes_stored", "n_delete_queries",
+               "n_keys_deleted")
 
     def simulated_seconds(self, per_query_s: float = 5e-4,
                           bandwidth_Bps: float = 200e6) -> float:
@@ -46,49 +54,40 @@ class KVSStats:
 
     def simulated_write_seconds(self, per_query_s: float = 5e-4,
                                 bandwidth_Bps: float = 200e6) -> float:
-        """Same cost model for the write side."""
-        return (self.n_put_queries * per_query_s
+        """Same cost model for the write side.  Deletes carry payload-free
+        requests: per-query overhead only."""
+        return ((self.n_put_queries + self.n_delete_queries) * per_query_s
                 + self.bytes_stored / bandwidth_Bps)
 
     def reset(self) -> None:
-        self.n_queries = self.n_values = self.bytes_fetched = 0
-        self.n_put_queries = self.n_values_put = self.bytes_stored = 0
+        for f in self._FIELDS:
+            setattr(self, f, 0)
 
     def snapshot(self) -> "KVSStats":
         """Copy of the current counters (pair with :meth:`restore` to run
         bookkeeping traffic without polluting stats a caller is
         accumulating)."""
-        return KVSStats(n_queries=self.n_queries, n_values=self.n_values,
-                        bytes_fetched=self.bytes_fetched,
-                        n_put_queries=self.n_put_queries,
-                        n_values_put=self.n_values_put,
-                        bytes_stored=self.bytes_stored)
+        return KVSStats(**{f: getattr(self, f) for f in self._FIELDS})
 
     def restore(self, saved: "KVSStats") -> None:
-        self.n_queries = saved.n_queries
-        self.n_values = saved.n_values
-        self.bytes_fetched = saved.bytes_fetched
-        self.n_put_queries = saved.n_put_queries
-        self.n_values_put = saved.n_values_put
-        self.bytes_stored = saved.bytes_stored
+        for f in self._FIELDS:
+            setattr(self, f, getattr(saved, f))
 
     @staticmethod
     def merged(parts: Iterable["KVSStats"]) -> "KVSStats":
         """Aggregate of several counters (e.g. per-shard stats)."""
         out = KVSStats()
         for p in parts:
-            out.n_queries += p.n_queries
-            out.n_values += p.n_values
-            out.bytes_fetched += p.bytes_fetched
-            out.n_put_queries += p.n_put_queries
-            out.n_values_put += p.n_values_put
-            out.bytes_stored += p.bytes_stored
+            for f in KVSStats._FIELDS:
+                setattr(out, f, getattr(out, f) + getattr(p, f))
         return out
 
 
 class Backend(Protocol):
     """What RStore requires of the distributed KV store (§2.4): batched reads
-    AND batched writes, each one round trip per call."""
+    AND batched writes, each one round trip per call.  ``multidelete`` is the
+    maintenance-path primitive (compaction GC): one round trip removing a
+    whole batch of superseded keys."""
 
     stats: KVSStats
 
@@ -96,6 +95,8 @@ class Backend(Protocol):
     def get(self, key: str) -> bytes: ...
     def multiget(self, keys: Sequence[str]) -> List[bytes]: ...
     def multiput(self, items: Sequence[Tuple[str, bytes]]) -> None: ...
+    def delete(self, key: str) -> None: ...
+    def multidelete(self, keys: Sequence[str]) -> None: ...
     def __contains__(self, key: str) -> bool: ...
 
 
@@ -143,6 +144,23 @@ class InMemoryKVS:
     def multiget_naive(self, keys: Sequence[str]) -> List[bytes]:
         """Per-key round-trips — the §2.3 baseline behaviour."""
         return [self.get(k) for k in keys]
+
+    def delete(self, key: str) -> None:
+        self.multidelete([key])
+
+    def multidelete(self, keys: Sequence[str]) -> None:
+        """One batched delete round-trip (the compaction GC primitive).
+
+        An empty batch costs nothing, matching the empty multiget/multiput
+        convention.  Deleting an absent key raises — the maintenance path
+        only ever deletes keys it owns, so a miss is an index/storage
+        divergence bug worth failing loudly on."""
+        if not keys:
+            return
+        for k in keys:
+            del self._d[k]
+        self.stats.n_delete_queries += 1
+        self.stats.n_keys_deleted += len(keys)
 
     def __contains__(self, key: str) -> bool:
         return key in self._d
@@ -213,6 +231,23 @@ class ShardedKVS:
         self.stats.n_put_queries += len(groups)
         self.stats.n_values_put += len(items)
         self.stats.bytes_stored += sum(len(v) for _, v in items)
+
+    # ---------------------------------------------------------------- deletes
+    def delete(self, key: str) -> None:
+        self.multidelete([key])
+
+    def multidelete(self, keys: Sequence[str]) -> None:
+        """One delete round trip per shard touched; an empty key list skips
+        the backend entirely (the empty-batch convention)."""
+        if not keys:
+            return
+        groups: Dict[int, List[str]] = {}
+        for k in keys:
+            groups.setdefault(self.shard_of(k), []).append(k)
+        for s, sub in groups.items():
+            self.shards[s].multidelete(sub)
+        self.stats.n_delete_queries += len(groups)
+        self.stats.n_keys_deleted += len(keys)
 
     # ------------------------------------------------------------------ misc
     def __contains__(self, key: str) -> bool:
@@ -302,6 +337,9 @@ class ShardedDeviceKVS:
         if n <= 0:
             return
         self._free.append((slot, n))
+        self._coalesce()
+
+    def _coalesce(self) -> None:
         self._free.sort()
         merged: List[Tuple[int, int]] = []
         for s, m in self._free:
@@ -374,6 +412,26 @@ class ShardedDeviceKVS:
 
     def get(self, key: str) -> bytes:
         return self.multiget([key])[0]
+
+    # --------------------------------------------------------------- delete
+    def delete(self, key: str) -> None:
+        self.multidelete([key])
+
+    def multidelete(self, keys: Sequence[str]) -> None:
+        """Remove a batch of keys in one round trip, returning their slot
+        extents to the first-fit free list (coalesced via ``_release``) so
+        compaction GC actually shrinks the device footprint.  Absent keys
+        raise; an empty batch costs nothing."""
+        if not keys:
+            return
+        for k in keys:
+            slot, n, _ = self._dir.pop(k)
+            if n > 0:
+                self._free.append((slot, n))
+        self._coalesce()            # one sort+merge for the whole batch
+        self.stats.n_delete_queries += 1
+        self.stats.n_keys_deleted += len(keys)
+        self._dirty = True
 
     def __contains__(self, key: str) -> bool:
         return key in self._dir

@@ -66,6 +66,9 @@ class _BatchView:
     def members(self, vid: int) -> np.ndarray:
         if vid == _VIRTUAL_ROOT:
             return np.empty(0, np.int64)
+        # graph.members is empty for retired versions, so a compaction
+        # rewrite spanning the whole (partially retired) tree just sees
+        # nothing to preserve there
         return np.intersect1d(self._graph.members(vid), self._new,
                               assume_unique=True)
 
@@ -93,13 +96,25 @@ class _BatchView:
 
 def partition_batch(graph: VersionGraph, batch: Sequence[int],
                     placed: np.ndarray, algorithm: str, capacity: int,
-                    chunk_id_base: int, **algo_kw) -> Partitioning:
-    """Partition the batch's new records; chunk ids start at chunk_id_base."""
-    new_rids: List[np.ndarray] = []
-    for v in batch:
-        adds = graph.tree_delta[v].adds
-        new_rids.append(adds[~placed[adds]])
-    new = np.unique(np.concatenate(new_rids)) if new_rids else np.empty(0, np.int64)
+                    chunk_id_base: int,
+                    records: Optional[np.ndarray] = None,
+                    **algo_kw) -> Partitioning:
+    """Partition the batch's new records; chunk ids start at chunk_id_base.
+
+    ``records`` overrides the delta-derived record set: the compaction path
+    passes the live records of its candidate chunks here (with ``placed``
+    masking everything else) and ``batch`` = every version, re-running the
+    same restricted partitioner over the records being rewritten.
+    """
+    if records is not None:
+        new = np.unique(np.asarray(records, dtype=np.int64))
+    else:
+        new_rids: List[np.ndarray] = []
+        for v in batch:
+            adds = graph.tree_delta[v].adds
+            new_rids.append(adds[~placed[adds]])
+        new = (np.unique(np.concatenate(new_rids)) if new_rids
+               else np.empty(0, np.int64))
 
     if algorithm in ("depth_first", "breadth_first", "delta", "shingle"):
         # greedy/stream algorithms: place new records in traversal order

@@ -66,8 +66,11 @@ class DeltaBaseline:
 
     def partition(self, graph: VersionGraph, capacity: int) -> Partitioning:
         packer = ChunkPacker(graph.store.sizes, capacity)
+        live = graph.live_record_mask() if graph.has_retired() else None
         for v in graph.versions:  # commit order
             adds = graph.tree_delta[v].adds
+            if live is not None:
+                adds = adds[live[adds]]
             packer.place_many(adds, dedupe=True)
         # no boundary merging: the stream layout *is* the baseline
         return packer.finish(self.name, merge_partial=False)

@@ -34,6 +34,10 @@ class ShinglePartitioner:
         origins = graph.store.origin_versions()
         order = np.lexsort((keys, origins) + tuple(shingles[:, l]
                            for l in range(self.n_hashes - 1, -1, -1)))
+        # retention GC: a record in no version (empty CSR row — all its
+        # versions were retired) is garbage and must not be re-chunked
+        degree = np.diff(indptr)
+        order = order[degree[order] > 0]
         packer = ChunkPacker(graph.store.sizes, capacity)
         packer.place_many(order)
         return packer.finish(self.name)

@@ -21,8 +21,13 @@ from .base import ChunkPacker
 def _traverse(graph: VersionGraph, order, name: str, capacity: int) -> Partitioning:
     packer = ChunkPacker(graph.store.sizes, capacity)
     keys = graph.store.keys()
+    # retention GC: deltas of retired versions may carry records reachable
+    # from no retained version — a rebuild must not resurrect that garbage
+    live = graph.live_record_mask() if graph.has_retired() else None
     for v in order:
         adds = graph.tree_delta[v].adds
+        if live is not None:
+            adds = adds[live[adds]]
         # deterministic within-delta order: by primary key
         adds = adds[np.argsort(keys[adds], kind="stable")]
         packer.place_many(adds, dedupe=True)  # dedupe: merge-sourced repeats

@@ -155,6 +155,10 @@ class VersionGraph:
         self.root: Optional[VersionId] = None
         self._memberships: Dict[VersionId, np.ndarray] = {}
         self._order: List[VersionId] = []                 # insertion (= topo) order
+        # retention GC: retired versions keep their tree structure (stable
+        # version indices for stored chunk-map bitmaps, ancestor walks) but
+        # lose their membership — their content is logically deleted
+        self._retired: set = set()
 
     # ------------------------------------------------------------- building
     def add_root(self, vid: VersionId, record_ids: np.ndarray) -> None:
@@ -178,6 +182,11 @@ class VersionGraph:
         for p in parents:
             if p not in self.parents:
                 raise ValueError(f"unknown parent version {p}")
+        for p in parents:
+            if p in self._retired:
+                raise ValueError(
+                    f"cannot commit onto retired version {p} (pruned by a "
+                    "retention policy)")
         adds = np.sort(np.asarray(adds, dtype=np.int64))
         dels = np.sort(np.asarray(dels, dtype=np.int64))
         d = DeltaIds(adds=adds, dels=dels)
@@ -269,9 +278,48 @@ class VersionGraph:
         # insertion order is already parents-before-children
         return list(self._order)
 
+    # ------------------------------------------------------------ retention
+    def retire(self, vids: Sequence[VersionId]) -> None:
+        """Logically delete ``vids`` (retention GC).
+
+        The tree structure (parents, deltas, insertion order) survives so
+        stored chunk-map bitmaps keep their version indices and ancestor
+        walks still work; only the membership is dropped — the version's
+        content becomes unreachable, and records reachable from no retained
+        version are garbage that a compaction pass reclaims physically.
+        """
+        for v in vids:
+            if v not in self.parents:
+                raise ValueError(f"unknown version {v}")
+        self._retired.update(vids)
+        for v in vids:
+            self._memberships.pop(v, None)
+
+    def is_retired(self, vid: VersionId) -> bool:
+        return vid in self._retired
+
+    def has_retired(self) -> bool:
+        return bool(self._retired)
+
+    def retained_versions(self) -> List[VersionId]:
+        """Non-retired versions in insertion order."""
+        return [v for v in self._order if v not in self._retired]
+
+    def live_record_mask(self) -> np.ndarray:
+        """Bool mask over record ids: reachable from ≥1 retained version.
+        With no retirement every membership record is live by definition."""
+        mask = np.zeros(len(self.store), dtype=bool)
+        for m in self._memberships.values():
+            mask[m] = True
+        return mask
+
     # ----------------------------------------------------------- membership
     def members(self, vid: VersionId) -> np.ndarray:
-        """Sorted record ids constituting version ``vid``."""
+        """Sorted record ids constituting version ``vid``.  A retired
+        version has no content: empty (partitioners treat it as carrying
+        nothing to preserve; ingest/query paths guard explicitly)."""
+        if vid in self._retired:
+            return np.empty(0, dtype=np.int64)
         return self._memberships[vid]
 
     def memberships(self) -> Dict[VersionId, np.ndarray]:
@@ -324,10 +372,13 @@ class VersionGraph:
         """Structural invariants used by property tests."""
         assert self.root is not None
         for v in self._order:
+            if v in self._retired:
+                assert v not in self._memberships
+                continue
             m = self._memberships[v]
             assert (np.diff(m) > 0).all(), f"membership of {v} not sorted-unique"
             p = self.tree_parent(v)
-            if p is None:
+            if p is None or p in self._retired:
                 continue
             d = self.tree_delta[v]
             pm = self._memberships[p]

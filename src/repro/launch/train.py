@@ -45,6 +45,10 @@ def run(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--retain-last", type=int, default=0,
+                    help="cap checkpoint storage: keep only the newest N "
+                         "versions and compact after each commit (0 = keep "
+                         "all)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--crash-at", type=int, default=-1,
                     help="simulate a hard failure after N steps")
@@ -94,6 +98,12 @@ def run(argv=None):
             v = ckpt.commit(state, parents=(last_version,),
                             tag=f"step{step + 1}")
             last_version = v
+            if args.retain_last > 0:
+                rep = ckpt.retain_last(args.retain_last)
+                if rep.mode != "noop":
+                    print(f"[train] compacted: -{rep.reclaimed_frac:.0%} "
+                          f"stored bytes ({rep.chunks_deleted} chunks -> "
+                          f"{rep.chunks_written})")
             pickle_meta(ckpt_path, ckpt, {"version": v, "step": step + 1})
             st = ckpt.storage_stats()
             print(f"[train] committed version {v} at step {step + 1} "

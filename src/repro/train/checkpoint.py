@@ -73,6 +73,7 @@ class VersionedCheckpointer:
             algorithm="bottom_up", capacity=4 << 20, batch_size=8,
             store_payloads=True))
         self.meta: Dict[int, Dict[str, TensorMeta]] = {}   # version -> metas
+        self.tags: Dict[str, int] = {}   # tag -> newest version committed under it
         self._key_to_block: Dict[int, Tuple[str, int]] = {}
         self._root: Optional[int] = None
 
@@ -138,6 +139,8 @@ class VersionedCheckpointer:
         else:
             vid = writer.commit(list(parents), adds=adds, dels=dels)
         self.meta[vid] = metas
+        if tag:
+            self.tags[tag] = vid
         if self._root is None:
             self._root = vid
         return vid, child_payload
@@ -170,6 +173,46 @@ class VersionedCheckpointer:
                 chain = [vid]
                 vids.append(vid)
         return vids
+
+    # ------------------------------------------------------------ retention
+    def _apply_retention(self, policy, compact: bool):
+        from ..core.compact import CompactionReport, Compactor
+        retired = set(self.rs.retain(policy))
+        for v in retired:
+            self.meta.pop(v, None)
+        self.tags = {t: v for t, v in self.tags.items() if v not in retired}
+        if not compact:
+            return None
+        # cost-model gate: called after every checkpoint commit, so only
+        # pay the rewrite once enough stored bytes are dead or the layout
+        # fragmented — not on every step
+        cp = Compactor(self.rs)
+        if cp.should_run():
+            return cp.run_pass()
+        return CompactionReport(mode="noop",
+                                layout_epoch=self.rs.layout_epoch)
+
+    def retain_last(self, k: int, compact: bool = True):
+        """Cap checkpoint storage: keep only the most recent ``k`` committed
+        versions and (by default) run a compaction pass — gated by the
+        :meth:`Compactor.should_run` cost model — so the dropped
+        checkpoints' record copies are physically reclaimed from the KVS.
+        Returns the :class:`~repro.core.compact.CompactionReport` (or None
+        with ``compact=False``).  The training loop calls this after each
+        checkpoint commit (``launch/train.py --retain-last``)."""
+        from ..core.compact import keep_last
+        return self._apply_retention(keep_last(k), compact)
+
+    def retain_tagged(self, tags: Sequence[str], compact: bool = True):
+        """Keep only the checkpoints committed under ``tags`` (the consumer
+        of ``commit(..., tag=...)``): pinned milestones survive, everything
+        else is pruned and compacted away."""
+        from ..core.compact import keep_tagged
+        missing = [t for t in tags if t not in self.tags]
+        if missing:
+            raise KeyError(f"unknown checkpoint tag(s) {missing}")
+        return self._apply_retention(
+            keep_tagged([self.tags[t] for t in tags]), compact)
 
     # -------------------------------------------------------------- restore
     def restore(self, vid: int, like=None):
