@@ -14,16 +14,22 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 # Fast bench smoke on tiny sizes: the write/read-path benchmarks assert
 # their round-trip counts (1 multiput per shard for a group flush; 1
-# multiget per session), and the compaction bench asserts the maintenance
+# multiget per session), the compaction bench asserts the maintenance
 # path's contract (one multiput round trip per touched shard plus one
 # multidelete round trip per touched shard per pass, retained versions
-# byte-identical) — so a round-trip regression fails CI here instead of
+# byte-identical), and the fault-tolerance bench asserts the degraded-mode
+# contract (replicated R=2 run with one replica killed: reads still succeed
+# byte-identically with ≤1 extra round trip per failed-over shard batch,
+# and RecoveryManager.rebuild restores each replica in ≤4 round trips) —
+# so a round-trip or availability regression fails CI here instead of
 # waiting for a full benchmark run.
 echo "== bench smoke (round-trip regression gate) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
-from benchmarks import bench_batched_query, bench_compaction, bench_write_path
+from benchmarks import (bench_batched_query, bench_compaction,
+                        bench_fault_tolerance, bench_write_path)
 bench_write_path.run(smoke=True)
 bench_batched_query.run(smoke=True)
 bench_compaction.run(smoke=True)
+bench_fault_tolerance.run(smoke=True)
 print("bench smoke OK")
 EOF

@@ -8,6 +8,10 @@ from .datagen import PAPER_DATASETS, DatasetSpec, dataset_stats, generate
 from .ingest import RStore, RStoreConfig, WriteSession
 from .kvs import (Backend, InMemoryKVS, KVSStats, ShardedDeviceKVS,
                   ShardedKVS)
+from .replica import (BackendTimeout, BackendUnavailable, FaultInjectingKVS,
+                      QuorumLost, RecoveryManager, RecoveryReport,
+                      ReplicatedKVS, RetryPolicy, ShardDown,
+                      TransientBackendError)
 from .types import Chunk, CompositeKey, Delta, Partitioning, Record
 from .version_graph import DeltaIds, RecordStore, VersionGraph
 
@@ -20,4 +24,7 @@ __all__ = [
     "ShardedDeviceKVS",
     "Compactor", "CompactionReport", "LayoutHealth", "RetentionPolicy",
     "keep_all", "keep_last", "keep_tagged", "measure_layout",
+    "BackendUnavailable", "TransientBackendError", "BackendTimeout",
+    "ShardDown", "QuorumLost", "FaultInjectingKVS", "RetryPolicy",
+    "ReplicatedKVS", "RecoveryManager", "RecoveryReport",
 ]

@@ -45,6 +45,14 @@ The write side mirrors this design: :class:`repro.core.ingest.WriteSession`
 one ``Backend.multiput`` — under :class:`repro.core.kvs.ShardedKVS` both
 directions cost one round trip per shard touched, however many queries or
 chunks the session carries.
+
+Fault tolerance is below this layer: with replicated shards
+(:class:`repro.core.replica.ReplicatedKVS`, via ``make_sharded_backend(...,
+replication_factor=R)``) the session ``multiget`` survives a replica death
+mid-workload unchanged — the group fails the batch over to a surviving
+replica (at most one extra read round trip per failed-over shard batch)
+and returns byte-identical results.  Only a whole shard group going down
+surfaces here, as :class:`repro.core.replica.BackendUnavailable`.
 """
 from __future__ import annotations
 

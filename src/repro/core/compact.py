@@ -30,7 +30,11 @@ uses), staging every new chunk and rebuilt chunk map into ONE group commit
 superseded chunk/map keys through the :class:`~repro.core.kvs.Backend`
 protocol's ``multidelete`` — one delete round trip per shard touched, with
 :class:`~repro.core.kvs.ShardedDeviceKVS` returning the freed extents to
-its slot free list.
+its slot free list.  Under replicated shards
+(:class:`~repro.core.replica.ReplicatedKVS`) both the rewrite multiput and
+the GC multidelete fan out across every live replica of each group; a
+replica that is down records the missed deletes in its repair log, so
+recovery never resurrects reclaimed chunks.
 
 Snapshot coherence is epoch-based: a pass bumps the store's *layout epoch*.
 Open :class:`~repro.core.api.Snapshot`\\ s notice on their next ``execute``

@@ -36,6 +36,12 @@ the facade keeps the seed behaviour of flushing before a read, while
 then refuses to observe unflushed deltas).  ``build()`` runs the full offline
 pipeline (sub-chunking when k>1 → partitioning → chunk/map writes →
 projections).
+
+With replicated shards (:class:`repro.core.replica.ReplicatedKVS`) the
+group flush survives a replica death mid-workload unchanged: the one
+``multiput`` per shard lands on every live replica with a write-ack quorum,
+and replicas that missed it are backfilled by read-repair or a
+:class:`repro.core.replica.RecoveryManager` rebuild.
 """
 from __future__ import annotations
 

@@ -21,6 +21,23 @@ Three implementations:
 - :class:`ShardedKVS` — the *distributed* layer the paper assumes: a router
   that hash-partitions the keyspace over N inner backends and fans
   ``multiget``/``multiput`` out as one round trip per shard touched.
+
+The replication & fault-tolerance layer lives in :mod:`repro.core.replica`
+and composes with all of the above through the same protocol:
+
+- :class:`~repro.core.replica.ReplicatedKVS` — an N-way replica group
+  (quorum writes, per-batch read failover, read-repair) that slots in as a
+  ``ShardedKVS`` shard via ``make_sharded_backend(..., replication_factor=R)``.
+
+- :class:`~repro.core.replica.FaultInjectingKVS` — a wrapper with a
+  deterministic seeded fault schedule (transient errors, timeouts, hard
+  ``kill()``) raising the :class:`~repro.core.replica.BackendUnavailable`
+  taxonomy, for testing every degraded-mode path.
+
+A missing key raises ``KeyError`` naming the key — a *data-level* miss,
+deliberately distinct from ``BackendUnavailable`` so failover logic never
+re-routes a legitimate miss.  ``scan`` (one round trip returning every
+stored item) is the recovery primitive replica rebuilds ride on.
 """
 from __future__ import annotations
 
@@ -42,10 +59,14 @@ class KVSStats:
     bytes_stored: int = 0
     n_delete_queries: int = 0   # delete round-trips (each delete / multidelete)
     n_keys_deleted: int = 0     # keys removed
+    n_retries: int = 0          # op retries after transient faults/timeouts
+    n_failovers: int = 0        # replica read attempts that failed over
+    simulated_backoff_seconds: float = 0.0  # backoff the retries would sleep
 
     _FIELDS = ("n_queries", "n_values", "bytes_fetched", "n_put_queries",
                "n_values_put", "bytes_stored", "n_delete_queries",
-               "n_keys_deleted")
+               "n_keys_deleted", "n_retries", "n_failovers",
+               "simulated_backoff_seconds")
 
     def simulated_seconds(self, per_query_s: float = 5e-4,
                           bandwidth_Bps: float = 200e6) -> float:
@@ -97,6 +118,7 @@ class Backend(Protocol):
     def multiput(self, items: Sequence[Tuple[str, bytes]]) -> None: ...
     def delete(self, key: str) -> None: ...
     def multidelete(self, keys: Sequence[str]) -> None: ...
+    def scan(self) -> List[Tuple[str, bytes]]: ...
     def __contains__(self, key: str) -> bool: ...
 
 
@@ -112,8 +134,17 @@ class InMemoryKVS:
     def put(self, key: str, value: bytes) -> None:
         self.multiput([(key, value)])
 
+    def _lookup(self, key: str) -> bytes:
+        """A miss names the missing key — a *data-level* KeyError, so
+        failover logic (and users) can tell "missing key" from "shard
+        down" (:class:`repro.core.replica.BackendUnavailable`)."""
+        try:
+            return self._d[key]
+        except KeyError:
+            raise KeyError(f"InMemoryKVS: missing key {key!r}") from None
+
     def get(self, key: str) -> bytes:
-        v = self._d[key]
+        v = self._lookup(key)
         self.stats.n_queries += 1
         self.stats.n_values += 1
         self.stats.bytes_fetched += len(v)
@@ -125,7 +156,7 @@ class InMemoryKVS:
         An empty batch costs nothing: no backend call, no stats."""
         if not keys:
             return []
-        vs = [self._d[k] for k in keys]
+        vs = [self._lookup(k) for k in keys]
         self.stats.n_queries += 1
         self.stats.n_values += len(vs)
         self.stats.bytes_fetched += sum(len(v) for v in vs)
@@ -158,9 +189,21 @@ class InMemoryKVS:
         if not keys:
             return
         for k in keys:
+            if k not in self._d:
+                raise KeyError(f"InMemoryKVS: missing key {k!r}")
             del self._d[k]
         self.stats.n_delete_queries += 1
         self.stats.n_keys_deleted += len(keys)
+
+    def scan(self) -> List[Tuple[str, bytes]]:
+        """Every stored (key, value) in one round trip — the recovery
+        primitive (:class:`repro.core.replica.RecoveryManager` rebuilds a
+        lost replica from one survivor scan)."""
+        items = list(self._d.items())
+        self.stats.n_queries += 1
+        self.stats.n_values += len(items)
+        self.stats.bytes_fetched += sum(len(v) for _, v in items)
+        return items
 
     def __contains__(self, key: str) -> bool:
         return key in self._d
@@ -250,6 +293,17 @@ class ShardedKVS:
         self.stats.n_keys_deleted += len(keys)
 
     # ------------------------------------------------------------------ misc
+    def scan(self) -> List[Tuple[str, bytes]]:
+        """Every stored item — one scan round trip per shard."""
+        out: List[Tuple[str, bytes]] = []
+        for s in self.shards:
+            items = s.scan()
+            out.extend(items)
+            self.stats.n_queries += 1
+            self.stats.n_values += len(items)
+            self.stats.bytes_fetched += sum(len(v) for _, v in items)
+        return out
+
     def __contains__(self, key: str) -> bool:
         return key in self.shards[self.shard_of(key)]
 
@@ -432,6 +486,12 @@ class ShardedDeviceKVS:
         self.stats.n_delete_queries += 1
         self.stats.n_keys_deleted += len(keys)
         self._dirty = True
+
+    def scan(self) -> List[Tuple[str, bytes]]:
+        """Every stored item via the one-gather ``multiget`` machinery —
+        one round trip (the replica-rebuild primitive)."""
+        keys = list(self._dir)
+        return list(zip(keys, self.multiget(keys)))
 
     def __contains__(self, key: str) -> bool:
         return key in self._dir

@@ -37,7 +37,10 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
 
 
 def make_sharded_backend(n_shards: int = 4, mesh: Mesh | None = None,
-                         slot_bytes: int = 1 << 16, n_slots: int = 1024):
+                         slot_bytes: int = 1 << 16, n_slots: int = 1024,
+                         replication_factor: int = 1,
+                         write_quorum: int | None = None,
+                         retry=None):
     """Mesh-aware shard placement for the store backend.
 
     Returns a :class:`repro.core.kvs.ShardedKVS` router over ``n_shards``
@@ -49,18 +52,39 @@ def make_sharded_backend(n_shards: int = 4, mesh: Mesh | None = None,
     slices wrap; with no mesh each shard is still a device-table KVS, just
     placed on the default device (use ``ShardedKVS([InMemoryKVS()] * n)``
     for a host-only backend).
+
+    With ``replication_factor=R > 1`` each shard becomes a
+    :class:`repro.core.replica.ReplicatedKVS` group of R device tables, each
+    replica on its own device slice (n_shards × R disjoint slices), so a
+    replica death takes out one device group, not the shard: reads fail
+    over inside the group, writes keep landing with ``write_quorum`` acks
+    (default 1 — availability-first), and
+    :class:`repro.core.replica.RecoveryManager` rebuilds lost replicas from
+    the survivors.  ``retry`` is the group's
+    :class:`repro.core.replica.RetryPolicy` (default policy if None).
     """
     from repro.core.kvs import ShardedDeviceKVS, ShardedKVS
+    from repro.core.replica import ReplicatedKVS
 
-    if mesh is None:
-        return ShardedKVS([ShardedDeviceKVS(slot_bytes, n_slots)
-                           for _ in range(n_shards)])
-    devs = mesh.devices.reshape(-1)
+    R = max(1, int(replication_factor))
+    n_tables = n_shards * R
+    devs = mesh.devices.reshape(-1) if mesh is not None else None
+
+    def make_table(j: int):
+        if devs is None:
+            return ShardedDeviceKVS(slot_bytes, n_slots)
+        group = devs[j::n_tables]
+        if len(group) == 0:                    # more tables than devices
+            group = devs[j % len(devs):j % len(devs) + 1]
+        sub = Mesh(np.asarray(group), ("kv",))
+        return ShardedDeviceKVS(slot_bytes, n_slots, mesh=sub)
+
+    if R == 1:
+        return ShardedKVS([make_table(i) for i in range(n_shards)])
     shards = []
     for i in range(n_shards):
-        group = devs[i::n_shards]
-        if len(group) == 0:                    # more shards than devices
-            group = devs[i % len(devs):i % len(devs) + 1]
-        sub = Mesh(np.asarray(group), ("kv",))
-        shards.append(ShardedDeviceKVS(slot_bytes, n_slots, mesh=sub))
+        replicas = [make_table(i * R + r) for r in range(R)]
+        shards.append(ReplicatedKVS(
+            replicas, write_quorum=1 if write_quorum is None else write_quorum,
+            retry=retry))
     return ShardedKVS(shards)

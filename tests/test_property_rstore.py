@@ -10,6 +10,8 @@ from hypothesis import strategies as st
 
 from repro.core import RStore, RStoreConfig, keep_last
 from repro.core.kvs import InMemoryKVS, ShardedKVS
+from repro.core.replica import (FaultInjectingKVS, RecoveryManager,
+                                ReplicatedKVS)
 
 
 @st.composite
@@ -207,3 +209,152 @@ def test_retention_compaction_interleavings_exact(w):
          for r in stored_rids & live_rids if int(keys_arr[r]) == pk},
         key=lambda x: rs.graph.versions.index(x))
     assert [o for o, _ in evo] == want_evo
+
+
+# ------------------------------------------------- replication under faults
+@st.composite
+def fault_plan(draw):
+    """A replicated backend shape plus a random fault schedule: per-op
+    transient/timeout probabilities and optionally one hard replica kill
+    partway through the workload."""
+    return {
+        "R": draw(st.sampled_from([2, 3])),
+        "n_shards": draw(st.sampled_from([1, 3])),
+        "p_transient": draw(st.sampled_from([0.0, 0.15, 0.3])),
+        "p_timeout": draw(st.sampled_from([0.0, 0.15])),
+        "kill": draw(st.booleans()),
+        "kill_step": draw(st.integers(0, 5)),
+        "seed": draw(st.integers(0, 2**31 - 1)),
+    }
+
+
+def _run_steps(rs, rng, steps, on_step):
+    """Drive the maintenance-workload step stream against ``rs``; call
+    ``on_step(i)`` before each step (fault-schedule hook)."""
+    v = rs.init_root({pk: rng.integers(0, 256, int(rng.integers(16, 96)),
+                                       dtype=np.uint8).tobytes()
+                      for pk in range(10)})
+    vids = [v]
+    for i, (kind, arg) in enumerate(steps):
+        on_step(i)
+        if kind == "commits":
+            for _ in range(arg):
+                adds = {int(rng.integers(0, 10)): rng.integers(
+                    0, 256, int(rng.integers(16, 96)),
+                    dtype=np.uint8).tobytes()}
+                if rng.integers(0, 2):
+                    adds[10 + int(rng.integers(0, 20))] = rng.integers(
+                        0, 256, int(rng.integers(16, 96)),
+                        dtype=np.uint8).tobytes()
+                vids.append(rs.commit([vids[-1]], adds=adds))
+        elif kind == "retain":
+            retired = set(rs.retain(keep_last(arg)))
+            vids = [x for x in vids if x not in retired]
+        else:
+            rs.compact(liveness_threshold=arg)
+    rs.flush()
+    return vids
+
+
+def _check_replicated_faulty(w, fp):
+    """Body of test_replicated_faulty_backend_byte_identical, callable with
+    concrete (workload, fault-plan) dicts — also exercised by
+    test_replicated_faulty_fixed_examples below when hypothesis is absent."""
+    cfg = dict(algorithm=w["algorithm"], capacity=w["capacity"], k=w["k"],
+               batch_size=w["batch"])
+    R, n_shards = fp["R"], fp["n_shards"]
+
+    rs0 = RStore(RStoreConfig(**cfg), kvs=InMemoryKVS())
+    vids0 = _run_steps(rs0, np.random.default_rng(w["seed"]), w["steps"],
+                       lambda i: None)
+
+    groups = [ReplicatedKVS(
+        [FaultInjectingKVS(InMemoryKVS(), seed=fp["seed"] + i * R + r,
+                           p_transient=fp["p_transient"],
+                           p_timeout=fp["p_timeout"])
+         for r in range(R)], write_quorum=1) for i in range(n_shards)]
+    kvs1 = groups[0] if n_shards == 1 else ShardedKVS(groups)
+    rs1 = RStore(RStoreConfig(**cfg), kvs=kvs1)
+    kill_at = fp["kill_step"] % len(w["steps"]) if fp["kill"] else None
+
+    def on_step(i):
+        if i == kill_at:
+            for g in groups:
+                g.replicas[0].kill()
+
+    vids1 = _run_steps(rs1, np.random.default_rng(w["seed"]), w["steps"],
+                       on_step)
+
+    # identical interleaving → identical retained versions, byte-identical
+    # content for every query class
+    assert vids1 == vids0
+    for vid in vids0:
+        assert rs1.get_version(vid)[0] == rs0.get_version(vid)[0]
+    v = vids0[-1]
+    pk = next(iter(rs0.get_version(v)[0]))
+    assert rs1.get_record(v, pk)[0] == rs0.get_record(v, pk)[0]
+    assert rs1.get_range(v, 0, 15)[0] == rs0.get_range(v, 0, 15)[0]
+    assert rs1.get_evolution(pk)[0] == rs0.get_evolution(pk)[0]
+
+    # recovery: revive the killed replicas, rebuild, and require every
+    # replica of every group to converge byte-identically with an empty
+    # repair log (missed GC deletes must not resurrect chunks)
+    if kill_at is not None:
+        for g in groups:
+            g.replicas[0].revive()
+    RecoveryManager(kvs1).recover_all()
+    for g in groups:
+        want = dict(g.replicas[0].inner.scan())
+        for idx, r in enumerate(g.replicas):
+            assert dict(r.inner.scan()) == want
+            assert g.pending_repairs(idx) == 0
+    # the replicated run stores exactly the same logical key set as the
+    # fault-free run
+    assert set().union(*(dict(g.replicas[0].inner.scan())
+                         for g in groups)) == set(rs0.kvs._d)
+
+
+@given(maintenance_workload(), fault_plan())
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_replicated_faulty_backend_byte_identical(w, fp):
+    """The SAME commit/retain/compact interleaving, run once on a plain
+    in-memory backend and once on a replicated backend with a random fault
+    schedule (injected transients/timeouts, optionally one replica of every
+    group hard-killed mid-run), must return byte-identical results for every
+    query — and after revive + recover_all every replica converges to the
+    same key/value set with empty repair logs."""
+    _check_replicated_faulty(w, fp)
+
+
+# fixed corner examples so the contract is still exercised when hypothesis
+# is unavailable (conftest shims @given into a skip)
+_FAULT_EXAMPLES = [
+    # flaky replicas, no kill, single replicated shard
+    ({"algorithm": "bottom_up", "k": 1, "batch": 3, "capacity": 512,
+      "n_shards": 0, "seed": 7,
+      "steps": [("commits", 4), ("retain", 3), ("commits", 3),
+                ("compact", 0.6)]},
+     {"R": 2, "n_shards": 1, "p_transient": 0.3, "p_timeout": 0.15,
+      "kill": False, "kill_step": 0, "seed": 11}),
+    # hard kill before the compact step, sharded router, R=3
+    ({"algorithm": "shingle", "k": 3, "batch": 2, "capacity": 2048,
+      "n_shards": 0, "seed": 19,
+      "steps": [("commits", 5), ("retain", 4), ("compact", 1.0),
+                ("commits", 2)]},
+     {"R": 3, "n_shards": 3, "p_transient": 0.15, "p_timeout": 0.0,
+      "kill": True, "kill_step": 2, "seed": 23}),
+    # kill at step 0: the whole workload runs degraded
+    ({"algorithm": "depth_first", "k": 1, "batch": 4, "capacity": 512,
+      "n_shards": 0, "seed": 31,
+      "steps": [("commits", 3), ("compact", 0.4), ("retain", 2),
+                ("commits", 2)]},
+     {"R": 2, "n_shards": 3, "p_transient": 0.0, "p_timeout": 0.15,
+      "kill": True, "kill_step": 0, "seed": 37}),
+]
+
+
+@pytest.mark.parametrize("w,fp", _FAULT_EXAMPLES,
+                         ids=["flaky", "kill-mid", "kill-start"])
+def test_replicated_faulty_fixed_examples(w, fp):
+    _check_replicated_faulty(w, fp)
