@@ -11,11 +11,11 @@ import time
 
 
 def main() -> None:
-    from . import (bench_batched_query, bench_chunksize, bench_compaction,
-                   bench_fault_tolerance, bench_fig8_span, bench_fig9_beta,
-                   bench_fig10_compression, bench_fig11_query,
-                   bench_fig12_scaling, bench_fig13_online, bench_table1,
-                   bench_write_path)
+    from . import (bench_batched_query, bench_cache, bench_chunksize,
+                   bench_compaction, bench_fault_tolerance, bench_fig8_span,
+                   bench_fig9_beta, bench_fig10_compression,
+                   bench_fig11_query, bench_fig12_scaling, bench_fig13_online,
+                   bench_table1, bench_write_path)
 
     suites = [
         ("table1_costmodel", bench_table1.run),
@@ -28,6 +28,7 @@ def main() -> None:
         ("write_path", bench_write_path.run),
         ("compaction", bench_compaction.run),
         ("fault_tolerance", bench_fault_tolerance.run),
+        ("chunk_cache", bench_cache.run),
         ("fig12_scaling", bench_fig12_scaling.run),
         ("fig13_online", bench_fig13_online.run),
     ]

@@ -20,16 +20,22 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # byte-identical), and the fault-tolerance bench asserts the degraded-mode
 # contract (replicated R=2 run with one replica killed: reads still succeed
 # byte-identically with ≤1 extra round trip per failed-over shard batch,
-# and RecoveryManager.rebuild restores each replica in ≤4 round trips) —
-# so a round-trip or availability regression fails CI here instead of
-# waiting for a full benchmark run.
+# and RecoveryManager.rebuild restores each replica in ≤4 round trips),
+# and the chunk-cache bench asserts the cache contract ((1) a fully warm
+# cache serves the mixed-64 batch with 0 backend read round trips, (2) a
+# cold cache costs exactly the seed's round-trip counts — the layer adds
+# no traffic, (3) post-compaction reads through a warm cache stay
+# byte-identical to fresh uncached reads) — so a round-trip, availability,
+# or cache-coherence regression fails CI here instead of waiting for a
+# full benchmark run.
 echo "== bench smoke (round-trip regression gate) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
-from benchmarks import (bench_batched_query, bench_compaction,
+from benchmarks import (bench_batched_query, bench_cache, bench_compaction,
                         bench_fault_tolerance, bench_write_path)
 bench_write_path.run(smoke=True)
 bench_batched_query.run(smoke=True)
 bench_compaction.run(smoke=True)
 bench_fault_tolerance.run(smoke=True)
+bench_cache.run(smoke=True)
 print("bench smoke OK")
 EOF

@@ -1,6 +1,7 @@
 """RStore core: the paper's contribution — a multi-version document store
 layered over a distributed key-value store."""
 from .api import (BatchResult, Q, Query, QueryResult, QueryStats, Snapshot)
+from .cache import CachingKVS
 from .compact import (CompactionReport, Compactor, LayoutHealth,
                       RetentionPolicy, keep_all, keep_last, keep_tagged,
                       measure_layout)
@@ -21,7 +22,7 @@ __all__ = [
     "DatasetSpec", "PAPER_DATASETS", "generate", "dataset_stats",
     "Q", "Query", "QueryResult", "QueryStats", "BatchResult", "Snapshot",
     "WriteSession", "Backend", "InMemoryKVS", "KVSStats", "ShardedKVS",
-    "ShardedDeviceKVS",
+    "ShardedDeviceKVS", "CachingKVS",
     "Compactor", "CompactionReport", "LayoutHealth", "RetentionPolicy",
     "keep_all", "keep_last", "keep_tagged", "measure_layout",
     "BackendUnavailable", "TransientBackendError", "BackendTimeout",

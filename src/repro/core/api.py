@@ -125,6 +125,8 @@ class QueryStats:
     bytes_fetched: int = 0
     kvs_queries: int = 0           # backend round trips
     records_returned: int = 0
+    cache_hits: int = 0            # batch-level: keys a CachingKVS served
+    bytes_from_cache: int = 0      # batch-level: payload served at memory speed
 
 
 @dataclass
@@ -261,6 +263,78 @@ class Snapshot:
                 cands[pos] = ids
         return cands  # type: ignore[return-value]
 
+    # ------------------------------------------------------------ prefetch
+    def _chunk_keys(self, chunk_ids: Iterable[int]) -> List[str]:
+        return [k for c in chunk_ids for k in (f"chunk/{c}", f"map/{c}")]
+
+    def prefetch(self, queries: Sequence[Query]) -> Dict[str, int]:
+        """Warm the chunk cache with everything ``queries`` would fetch.
+
+        A no-op (``{"warmed_keys": 0, ...}``) unless the snapshot's KVS is a
+        :class:`~repro.core.cache.CachingKVS` layer.  The fill is a normal
+        read-through ``multiget`` — already-cached keys cost nothing, misses
+        arrive in ONE round trip (per shard) and pass the admission rule —
+        so a subsequent ``execute`` of the same queries takes 0 backend read
+        round trips.
+        """
+        self._check_fresh()
+        if not getattr(self.kvs, "is_cache", False):
+            return {"warmed_keys": 0, "round_trips": 0, "cache": 0}
+        cands = self.plan(list(queries))
+        nonempty = [c for c in cands if len(c)]
+        all_ids = (np.unique(np.concatenate(nonempty)) if nonempty
+                   else np.empty(0, np.int64))
+        return self._warm(self._chunk_keys(int(c) for c in all_ids))
+
+    def prefetch_evolution(self, pk: int, lineage_versions: int = 4
+                           ) -> Dict[str, int]:
+        """Warm the cache for ``Q.evolution(pk)`` by walking VersionGraph
+        paths.
+
+        The base warm set is ``pk``'s key posting list — exactly the chunks
+        the evolution query plans, so it runs with 0 backend read round
+        trips afterwards.  On top, the version-tree paths root→leaf are
+        walked to recover the lineage of versions where ``pk`` actually
+        changed (its record copies name their origin versions), and the
+        newest ``lineage_versions`` of those get their version posting
+        lists warmed too — an evolution read is typically followed by
+        version/record reads at the versions where the record changed.
+        """
+        self._check_fresh()
+        if not getattr(self.kvs, "is_cache", False):
+            return {"warmed_keys": 0, "round_trips": 0, "cache": 0}
+        cids = {int(c) for c in self.proj.chunks_for_key(pk)}
+
+        # lineage walk: origins of pk's copies, ordered along tree paths
+        store = self.graph.store
+        rids = np.flatnonzero(store.keys() == pk)
+        origin_set = {int(o) for o in store.origin_versions()[rids]}
+        lineage: List[int] = []
+        seen: set = set()
+        for leaf in self.graph.leaves():
+            if self.graph.is_retired(leaf):
+                continue
+            # path_to_root is leaf→root; reverse for chronological order
+            for v in reversed(self.graph.path_to_root(leaf)):
+                if v in origin_set and v not in seen:
+                    seen.add(v)
+                    lineage.append(v)
+        for v in lineage[-lineage_versions:]:
+            vc = self.proj.version_chunks.get(v)
+            if vc is not None:
+                cids.update(int(c) for c in vc)
+        return self._warm(self._chunk_keys(sorted(cids)))
+
+    def _warm(self, keys: List[str]) -> Dict[str, int]:
+        s = self.kvs.stats
+        q0, h0 = s.n_queries, s.n_cache_hits
+        if keys:
+            self.kvs.multiget(keys)
+        return {"warmed_keys": len(keys),
+                "round_trips": s.n_queries - q0,
+                "already_cached": s.n_cache_hits - h0,
+                "cache": 1}
+
     # ------------------------------------------------------------- execute
     def execute(self, queries: Sequence[Query]) -> BatchResult:
         """Plan → dedupe → ONE interleaved multiget → extract."""
@@ -278,11 +352,18 @@ class Snapshot:
         if len(all_ids):
             q0 = self.kvs.stats.n_queries
             b0 = self.kvs.stats.bytes_fetched
-            # interleaved chunk/map keys: chunks + maps in ONE round trip
+            h0 = self.kvs.stats.n_cache_hits
+            c0 = self.kvs.stats.bytes_served_from_cache
+            # interleaved chunk/map keys: chunks + maps in ONE round trip.
+            # Under a CachingKVS the hit/miss partition happens inside this
+            # multiget — cached keys are served from memory and ONE inner
+            # fetch covers the misses, so kvs_queries is 0 on a warm cache.
             keys = [k for c in all_ids for k in (f"chunk/{c}", f"map/{c}")]
             blobs = self.kvs.multiget(keys)
             batch.kvs_queries = self.kvs.stats.n_queries - q0
             batch.bytes_fetched = self.kvs.stats.bytes_fetched - b0
+            batch.cache_hits = self.kvs.stats.n_cache_hits - h0
+            batch.bytes_from_cache = self.kvs.stats.bytes_served_from_cache - c0
             for j, cid in enumerate(all_ids):
                 cb, mb = blobs[2 * j], blobs[2 * j + 1]
                 fetched[int(cid)] = (StoredChunk.from_bytes(cb),

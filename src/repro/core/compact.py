@@ -58,9 +58,10 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
     from .ingest import RStore
     from .version_graph import VersionGraph
 
-# same constants as KVSStats.simulated_seconds — the §2.3 Cassandra-like model
-PER_QUERY_S = 5e-4
-BANDWIDTH_BPS = 200e6
+# same constants as KVSStats.simulated_seconds — the §2.3 Cassandra-like
+# model, now owned by costmodel so the chunk cache prices with them too
+PER_QUERY_S = costmodel.PER_QUERY_S
+BANDWIDTH_BPS = costmodel.BANDWIDTH_BPS
 
 
 # ---------------------------------------------------------- retention policies
@@ -366,9 +367,11 @@ class Compactor:
             bytes_deleted += rs._chunk_bytes.pop(int(c))
             del rs._chunk_records[int(c)]
 
-        # new layout epoch: open snapshots re-pin via snapshot.refresh()
+        # new layout epoch: open snapshots re-pin via snapshot.refresh(),
+        # and the chunk cache flushes the superseded keys at the same moment
         rs.proj = Projections.build_from_r2c(graph, rs.r2c, rs.n_chunks)
         rs._layout_epoch += 1
+        rs._notify_layout_change(del_keys)
         after = self.health()
         return CompactionReport(
             mode="pass", candidates=len(cands),

@@ -11,6 +11,23 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict
 
+# §2.3 Cassandra-like request pricing: every batched round trip pays a fixed
+# per-request overhead, every byte pays transfer time.  These two constants
+# are THE system-wide simulated-cost calibration — KVSStats.simulated_seconds,
+# the compaction trigger, and the chunk cache's admission rule all price
+# traffic with them, so "is it worth a round trip?" means the same thing on
+# every layer.
+PER_QUERY_S = 5e-4
+BANDWIDTH_BPS = 200e6
+
+
+def fetch_seconds(n_queries: float, n_bytes: float,
+                  per_query_s: float = PER_QUERY_S,
+                  bandwidth_Bps: float = BANDWIDTH_BPS) -> float:
+    """Simulated cost of fetching ``n_bytes`` in ``n_queries`` round trips —
+    the Table-1 query-cost kernel (overhead + transfer) in one place."""
+    return n_queries * per_query_s + n_bytes / bandwidth_Bps
+
 
 @dataclass(frozen=True)
 class Workload:

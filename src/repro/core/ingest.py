@@ -464,6 +464,8 @@ class RStore:
         stale = sorted(old_ids - set(self._chunk_records))
         self.kvs.multidelete(
             [k for c in stale for k in (f"chunk/{c}", f"map/{c}")])
+        self._notify_layout_change(
+            [k for c in stale for k in (f"chunk/{c}", f"map/{c}")])
         self._flushed_versions = graph.num_versions
         return part
 
@@ -513,6 +515,29 @@ class RStore:
     @property
     def layout_epoch(self) -> int:
         return self._layout_epoch
+
+    # --------------------------------------------------------- cache layer
+    def _cache(self):
+        """The CachingKVS layer, if one tops the backend stack."""
+        return self.kvs if getattr(self.kvs, "is_cache", False) else None
+
+    def _notify_layout_change(self, superseded_keys) -> None:
+        """Layout-epoch hook: ``build()`` / ``compact()`` re-partitioned
+        chunk storage — flush the cache entries the pass superseded, at the
+        same moment open snapshots need ``refresh()`` / re-``snapshot()``.
+        (Rewritten keys are already fresh via write-through; this drops the
+        deleted old layout's keys even if maintenance bypassed the cache.)"""
+        c = self._cache()
+        if c is not None:
+            c.on_layout_epoch(self._build_epoch + self._layout_epoch,
+                              superseded_keys)
+
+    def cache_stats(self) -> Optional[Dict[str, float]]:
+        """Hit-rate / occupancy report of the chunk cache layer; ``None``
+        when the backend stack has no :class:`~repro.core.cache.CachingKVS`
+        on top."""
+        c = self._cache()
+        return None if c is None else c.cache_report()
 
     # ------------------------------------------------------------- queries
     def snapshot(self) -> Snapshot:
@@ -568,10 +593,12 @@ class RStore:
         return r.value, r.stats
 
     # ------------------------------------------------------------- metrics
-    def storage_stats(self) -> Dict[str, int]:
-        """Chunk/index sizes.  ``stored_chunk_bytes`` is tracked
-        incrementally at chunk-write time — the seed multiget every chunk
-        blob just to size it, a full-store read per stats call."""
+    def storage_stats(self) -> Dict[str, object]:
+        """Chunk/index sizes (plus a ``"cache"`` sub-report when a
+        :class:`~repro.core.cache.CachingKVS` tops the backend stack).
+        ``stored_chunk_bytes`` is tracked incrementally at chunk-write time
+        — the seed multiget every chunk blob just to size it, a full-store
+        read per stats call."""
         out = {
             # stored chunks, not the high-water id counter: after a
             # compaction pass the id space is sparse (old ids deleted, new
@@ -582,4 +609,7 @@ class RStore:
         }
         if self.proj is not None:
             out.update(self.proj.compressed_size())
+        cache = self.cache_stats()
+        if cache is not None:
+            out["cache"] = cache
         return out

@@ -41,12 +41,15 @@ stored item) is the recovery primitive replica rebuilds ride on.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import zlib
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
+
+from .costmodel import BANDWIDTH_BPS, PER_QUERY_S
 
 
 @dataclass
@@ -62,19 +65,17 @@ class KVSStats:
     n_retries: int = 0          # op retries after transient faults/timeouts
     n_failovers: int = 0        # replica read attempts that failed over
     simulated_backoff_seconds: float = 0.0  # backoff the retries would sleep
+    n_cache_hits: int = 0       # reads served by a CachingKVS layer
+    n_cache_misses: int = 0     # reads a CachingKVS had to forward down
+    bytes_served_from_cache: int = 0  # payload served at memory speed
 
-    _FIELDS = ("n_queries", "n_values", "bytes_fetched", "n_put_queries",
-               "n_values_put", "bytes_stored", "n_delete_queries",
-               "n_keys_deleted", "n_retries", "n_failovers",
-               "simulated_backoff_seconds")
-
-    def simulated_seconds(self, per_query_s: float = 5e-4,
-                          bandwidth_Bps: float = 200e6) -> float:
+    def simulated_seconds(self, per_query_s: float = PER_QUERY_S,
+                          bandwidth_Bps: float = BANDWIDTH_BPS) -> float:
         """Cassandra-like read cost model: per-request overhead + transfer."""
         return self.n_queries * per_query_s + self.bytes_fetched / bandwidth_Bps
 
-    def simulated_write_seconds(self, per_query_s: float = 5e-4,
-                                bandwidth_Bps: float = 200e6) -> float:
+    def simulated_write_seconds(self, per_query_s: float = PER_QUERY_S,
+                                bandwidth_Bps: float = BANDWIDTH_BPS) -> float:
         """Same cost model for the write side.  Deletes carry payload-free
         requests: per-query overhead only."""
         return ((self.n_put_queries + self.n_delete_queries) * per_query_s
@@ -102,6 +103,11 @@ class KVSStats:
             for f in KVSStats._FIELDS:
                 setattr(out, f, getattr(out, f) + getattr(p, f))
         return out
+
+
+# Derived, not hand-maintained: reset/snapshot/restore/merged iterate this in
+# declaration order, so adding a counter to the dataclass is the whole change.
+KVSStats._FIELDS = tuple(f.name for f in dataclasses.fields(KVSStats))
 
 
 class Backend(Protocol):

@@ -594,19 +594,35 @@ class RecoveryManager:
             raise ValueError(f"replica index {replica} out of range [0,{n})")
         target = group.replicas[replica]
 
+        # survivor selection fails over, like every read: a candidate whose
+        # live flag is stale (killed since its last op) must not crash the
+        # rebuild — mark it down and try the next peer.  Its copy becomes
+        # authoritative only after its repair log flushes, so the flush is
+        # inside the guarded attempt too.
         source = None
+        want = None
+        last_err: Optional[BackendUnavailable] = None
+        start = group.preferred   # pin: mark_down below moves the preference
         for j in range(n):
-            i = (group.preferred + j) % n
-            if i != replica and group._live[i]:
+            i = (start + j) % n
+            if i == replica or not group._live[i]:
+                continue
+            try:
+                # survivor: repair log flushed -> authoritative; ONE scan
+                group._flush_repair(i)
+                want = dict(group.retry.call(
+                    lambda i=i: group.replicas[i].scan(), group.stats))
                 source = i
                 break
+            except ShardDown as e:
+                group.mark_down(i)
+                group.stats.n_failovers += 1
+                last_err = e
+            except BackendUnavailable as e:
+                group.stats.n_failovers += 1
+                last_err = e
         if source is None:
-            raise ShardDown("no live survivor to rebuild from")
-
-        # survivor: repair log flushed -> authoritative; ONE scan round trip
-        group._flush_repair(source)
-        want = dict(group.retry.call(
-            lambda: group.replicas[source].scan(), group.stats))
+            raise last_err or ShardDown("no live survivor to rebuild from")
 
         # target: diff against its (possibly stale, possibly empty) state
         have = dict(group.retry.call(lambda: target.scan(), group.stats))
@@ -637,5 +653,15 @@ class RecoveryManager:
                 if not lv:
                     reports.append(self.rebuild(i, shard=shard))
             for i in range(len(group.replicas)):
-                group._flush_repair(i)
+                if not group._live[i]:
+                    continue
+                try:
+                    group._flush_repair(i)
+                except ShardDown:
+                    # stale-live replica discovered dead mid-flush: out of
+                    # the rotation; its repair log is kept (flush removes
+                    # ops only after they apply) for the next rebuild
+                    group.mark_down(i)
+                except BackendUnavailable:
+                    pass  # flaky, not dead: log stays; a later flush retries
         return reports

@@ -40,7 +40,9 @@ def make_sharded_backend(n_shards: int = 4, mesh: Mesh | None = None,
                          slot_bytes: int = 1 << 16, n_slots: int = 1024,
                          replication_factor: int = 1,
                          write_quorum: int | None = None,
-                         retry=None):
+                         retry=None,
+                         cache_bytes: int | None = None,
+                         cache_kw: dict | None = None):
     """Mesh-aware shard placement for the store backend.
 
     Returns a :class:`repro.core.kvs.ShardedKVS` router over ``n_shards``
@@ -62,9 +64,22 @@ def make_sharded_backend(n_shards: int = 4, mesh: Mesh | None = None,
     :class:`repro.core.replica.RecoveryManager` rebuilds lost replicas from
     the survivors.  ``retry`` is the group's
     :class:`repro.core.replica.RetryPolicy` (default policy if None).
+
+    With ``cache_bytes`` set, the router is topped with a
+    :class:`repro.core.cache.CachingKVS` chunk cache of that byte budget
+    (``cache_kw`` passes through tuning knobs like ``always_admit_bytes``):
+    hot chunks are then served at memory speed and a fully warm session
+    ``multiget`` costs 0 device round trips.
     """
+    from repro.core.cache import CachingKVS
     from repro.core.kvs import ShardedDeviceKVS, ShardedKVS
     from repro.core.replica import ReplicatedKVS
+
+    def finish(router):
+        if cache_bytes:
+            return CachingKVS(router, cache_bytes=cache_bytes,
+                              **(cache_kw or {}))
+        return router
 
     R = max(1, int(replication_factor))
     n_tables = n_shards * R
@@ -80,11 +95,11 @@ def make_sharded_backend(n_shards: int = 4, mesh: Mesh | None = None,
         return ShardedDeviceKVS(slot_bytes, n_slots, mesh=sub)
 
     if R == 1:
-        return ShardedKVS([make_table(i) for i in range(n_shards)])
+        return finish(ShardedKVS([make_table(i) for i in range(n_shards)]))
     shards = []
     for i in range(n_shards):
         replicas = [make_table(i * R + r) for r in range(R)]
         shards.append(ReplicatedKVS(
             replicas, write_quorum=1 if write_quorum is None else write_quorum,
             retry=retry))
-    return ShardedKVS(shards)
+    return finish(ShardedKVS(shards))

@@ -8,7 +8,7 @@ import pytest
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core import RStore, RStoreConfig, keep_last
+from repro.core import CachingKVS, RStore, RStoreConfig, keep_last
 from repro.core.kvs import InMemoryKVS, ShardedKVS
 from repro.core.replica import (FaultInjectingKVS, RecoveryManager,
                                 ReplicatedKVS)
@@ -228,9 +228,11 @@ def fault_plan(draw):
     }
 
 
-def _run_steps(rs, rng, steps, on_step):
+def _run_steps(rs, rng, steps, on_step, probe=None):
     """Drive the maintenance-workload step stream against ``rs``; call
-    ``on_step(i)`` before each step (fault-schedule hook)."""
+    ``on_step(i)`` before each step (fault-schedule hook) and ``probe(vids)``
+    after each step (mid-run read hook — both runs of a comparison must pass
+    the same probe shape so their flush timing stays identical)."""
     v = rs.init_root({pk: rng.integers(0, 256, int(rng.integers(16, 96)),
                                        dtype=np.uint8).tobytes()
                       for pk in range(10)})
@@ -252,6 +254,8 @@ def _run_steps(rs, rng, steps, on_step):
             vids = [x for x in vids if x not in retired]
         else:
             rs.compact(liveness_threshold=arg)
+        if probe is not None:
+            probe(vids)
     rs.flush()
     return vids
 
@@ -358,3 +362,130 @@ _FAULT_EXAMPLES = [
                          ids=["flaky", "kill-mid", "kill-start"])
 def test_replicated_faulty_fixed_examples(w, fp):
     _check_replicated_faulty(w, fp)
+
+
+# ------------------------------------------------------ chunk cache coherence
+@st.composite
+def cache_plan(draw):
+    """CachingKVS shapes: budgets from eviction-churn-tiny to everything-fits,
+    with and without the tiny-blob admission bypass."""
+    return {
+        "cache_bytes": draw(st.sampled_from([1 << 12, 1 << 16, 4 << 20])),
+        "always_admit_bytes": draw(st.sampled_from([0, 4096])),
+    }
+
+
+def _check_cached_coherent(w, fp, cp):
+    """Body of test_cached_reads_byte_identical_under_interleavings, callable
+    with concrete (workload, fault-plan, cache-plan) dicts — also exercised
+    by test_cached_coherence_fixed_examples when hypothesis is absent."""
+    cfg = dict(algorithm=w["algorithm"], capacity=w["capacity"], k=w["k"],
+               batch_size=w["batch"])
+    R, n_shards = fp["R"], fp["n_shards"]
+
+    # oracle: plain uncached in-memory backend, probed after every step
+    probes0 = []
+    rs0 = RStore(RStoreConfig(**cfg), kvs=InMemoryKVS())
+
+    def probe0(vids):
+        got, _ = rs0.get_version(vids[-1])
+        pk = next(iter(got)) if got else 0
+        probes0.append((got, rs0.get_evolution(pk)[0]))
+
+    vids0 = _run_steps(rs0, np.random.default_rng(w["seed"]), w["steps"],
+                       lambda i: None, probe=probe0)
+
+    # subject: CachingKVS over a replicated (optionally sharded, optionally
+    # faulty/killed) backend, same interleaving, same probes
+    groups = [ReplicatedKVS(
+        [FaultInjectingKVS(InMemoryKVS(), seed=fp["seed"] + i * R + r,
+                           p_transient=fp["p_transient"],
+                           p_timeout=fp["p_timeout"])
+         for r in range(R)], write_quorum=1) for i in range(n_shards)]
+    kvs1 = CachingKVS(groups[0] if n_shards == 1 else ShardedKVS(groups),
+                      cache_bytes=cp["cache_bytes"],
+                      always_admit_bytes=cp["always_admit_bytes"])
+    rs1 = RStore(RStoreConfig(**cfg), kvs=kvs1)
+    kill_at = fp["kill_step"] % len(w["steps"]) if fp["kill"] else None
+    probes1 = []
+
+    def on_step(i):
+        if i == kill_at:
+            for g in groups:
+                g.replicas[0].kill()
+
+    def probe1(vids):
+        got, _ = rs1.get_version(vids[-1])
+        pk = next(iter(got)) if got else 0
+        probes1.append((got, rs1.get_evolution(pk)[0]))
+        # the byte budget is an invariant, not a steady-state property
+        assert kvs1.cached_bytes <= kvs1.cache_bytes
+
+    vids1 = _run_steps(rs1, np.random.default_rng(w["seed"]), w["steps"],
+                       on_step, probe=probe1)
+
+    # identical interleaving → identical version ids, and every mid-run
+    # probe through the cache was byte-identical to the uncached oracle
+    assert vids1 == vids0
+    assert probes1 == probes0
+    # final state: every retained version + every query class byte-identical
+    for vid in vids0:
+        assert rs1.get_version(vid)[0] == rs0.get_version(vid)[0]
+    v = vids0[-1]
+    pk = next(iter(rs0.get_version(v)[0]))
+    assert rs1.get_record(v, pk)[0] == rs0.get_record(v, pk)[0]
+    assert rs1.get_range(v, 0, 15)[0] == rs0.get_range(v, 0, 15)[0]
+    assert rs1.get_evolution(pk)[0] == rs0.get_evolution(pk)[0]
+    # the cache was actually exercised, and the budget still holds
+    assert kvs1.stats.n_cache_hits + kvs1.stats.n_cache_misses > 0
+    assert kvs1.cached_bytes <= kvs1.cache_bytes
+
+
+@given(maintenance_workload(), fault_plan(), cache_plan())
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_cached_reads_byte_identical_under_interleavings(w, fp, cp):
+    """For ANY interleaving of commit waves, retention prunings, compaction
+    passes, and replica kills, reads through a CachingKVS (any budget, any
+    admission tuning) are byte-identical to an uncached oracle run — both
+    mid-run after every step and at the end for every query class — and the
+    cache never exceeds its byte budget."""
+    _check_cached_coherent(w, fp, cp)
+
+
+# fixed corner examples so the coherence contract is still exercised when
+# hypothesis is unavailable (conftest shims @given into a skip)
+_CACHE_EXAMPLES = [
+    # tiny budget: constant eviction/admission churn across a compact pass
+    ({"algorithm": "bottom_up", "k": 1, "batch": 3, "capacity": 512,
+      "n_shards": 0, "seed": 43,
+      "steps": [("commits", 4), ("compact", 0.6), ("commits", 3),
+                ("retain", 3), ("compact", 1.0)]},
+     {"R": 2, "n_shards": 1, "p_transient": 0.0, "p_timeout": 0.0,
+      "kill": False, "kill_step": 0, "seed": 47},
+     {"cache_bytes": 1 << 12, "always_admit_bytes": 0}),
+    # big budget, flaky sharded replicas, kill mid-run: warm cache must stay
+    # coherent through failover + retention + compaction
+    ({"algorithm": "shingle", "k": 1, "batch": 2, "capacity": 2048,
+      "n_shards": 0, "seed": 53,
+      "steps": [("commits", 5), ("retain", 4), ("compact", 0.8),
+                ("commits", 2)]},
+     {"R": 2, "n_shards": 3, "p_transient": 0.15, "p_timeout": 0.15,
+      "kill": True, "kill_step": 1, "seed": 59},
+     {"cache_bytes": 4 << 20, "always_admit_bytes": 4096}),
+    # k>1: compaction falls back to a full rebuild — the layout-epoch hook
+    # (not incremental invalidation) carries the coherence load
+    ({"algorithm": "depth_first", "k": 3, "batch": 4, "capacity": 1024,
+      "n_shards": 0, "seed": 61,
+      "steps": [("commits", 4), ("compact", 0.5), ("retain", 2),
+                ("commits", 2), ("compact", 1.0)]},
+     {"R": 3, "n_shards": 1, "p_transient": 0.0, "p_timeout": 0.15,
+      "kill": True, "kill_step": 0, "seed": 67},
+     {"cache_bytes": 1 << 16, "always_admit_bytes": 4096}),
+]
+
+
+@pytest.mark.parametrize("w,fp,cp", _CACHE_EXAMPLES,
+                         ids=["tiny-budget", "kill-warm", "k3-rebuild"])
+def test_cached_coherence_fixed_examples(w, fp, cp):
+    _check_cached_coherent(w, fp, cp)

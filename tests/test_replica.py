@@ -21,10 +21,21 @@ def _group(n=2, quorum=1, retry=None, **fault_kw):
 
 # ------------------------------------------------------------- stats guards
 def test_kvsstats_fields_drift_guard():
-    """_FIELDS must track the dataclass exactly, or new counters silently
-    drop out of merged/snapshot/reset/restore."""
+    """_FIELDS is now DERIVED from dataclasses.fields(), so a new counter can
+    never silently drop out of merged/snapshot/reset/restore — the guard only
+    checks ordering (declaration order is the stable iteration order) and
+    that every declared field actually round-trips."""
     declared = tuple(f.name for f in dataclasses.fields(KVSStats))
-    assert declared == KVSStats._FIELDS
+    assert KVSStats._FIELDS == declared
+    for f in ("n_cache_hits", "n_cache_misses", "bytes_served_from_cache"):
+        assert f in KVSStats._FIELDS
+    s = KVSStats(**{name: i + 1 for i, name in enumerate(declared)})
+    snap = s.snapshot()
+    assert all(getattr(snap, f) == getattr(s, f) for f in declared)
+    m = KVSStats.merged([s, s])
+    assert all(getattr(m, f) == 2 * getattr(s, f) for f in declared)
+    s.reset()
+    assert all(getattr(s, f) == 0 for f in declared)
 
 
 def test_kvsstats_new_counters_roundtrip():
@@ -333,6 +344,60 @@ def test_recover_all_over_sharded_router():
         assert dict(g.replicas[0].inner.scan()) == \
             dict(g.replicas[1].inner.scan())
         assert g.pending_repairs(0) == 0 and g.pending_repairs(1) == 0
+
+
+def test_scan_fails_over_when_preferred_replica_down():
+    """scan() is the recovery primitive — it must fail over exactly like
+    multiget when the preferred replica is killed but not yet marked down
+    (the recovery paths built on scan assume a live preferred replica)."""
+    g, reps = _group(n=3)
+    g.multiput([("a", b"1"), ("b", b"2")])
+    reps[0].kill()                             # stale _live[0] == True
+    assert dict(g.scan()) == {"a": b"1", "b": b"2"}
+    assert g.live == (False, True, True)       # discovered during the scan
+    assert g.stats.n_failovers >= 1
+
+
+def test_rebuild_source_selection_fails_over_stale_live_survivor():
+    """rebuild() picks its survivor by live flags; a candidate killed since
+    its last op (flag still True) must be failed over like any read —
+    marked down, next peer tried — not crash the rebuild."""
+    g, reps = _group(n=3)
+    g.multiput([("a", b"1"), ("b", b"2")])
+    g.mark_down(0)                             # target: down, then revived
+    g.put("late", b"z")                        # logged for replica 0
+    reps[1].kill()                             # preferred survivor, stale flag
+    rep = RecoveryManager(g).rebuild(0)
+    assert rep.source == 2                     # skipped the dead candidate
+    assert g.live == (True, False, True)       # 1 discovered down, 0 rebuilt
+    assert dict(reps[0].inner.scan()) == dict(reps[2].inner.scan())
+    assert g.pending_repairs(0) == 0
+    # the discovered-dead survivor is rebuildable afterwards, same path
+    reps[1].revive()
+    RecoveryManager(g).rebuild(1)
+    assert g.live == (True, True, True)
+    assert dict(reps[1].inner.scan()) == dict(reps[2].inner.scan())
+
+
+def test_recover_all_survives_stale_live_replica_during_flush():
+    """recover_all's final repair-log flush must not crash on a replica
+    whose live flag went stale: mark it down (the log survives — flushes
+    drop ops only after they apply) instead of raising ShardDown."""
+    g, reps = _group(n=3)
+    g.multiput([("a", b"1"), ("b", b"2")])
+    g.mark_down(2)
+    g.put("late", b"z")                        # repair log for replica 2
+    g.mark_live(2)                             # back in rotation, log pending
+    reps[2].kill()                             # ...but actually dead
+    reports = RecoveryManager(g).recover_all()
+    assert reports == []                       # nothing was marked down going in
+    assert g.live == (True, True, False)       # discovered during the flush
+    assert g.pending_repairs(2) == 1           # log kept for the next rebuild
+    reps[2].revive()
+    RecoveryManager(g).recover_all()
+    assert g.live == (True, True, True)
+    assert g.pending_repairs(2) == 0
+    assert dict(reps[2].inner.scan()) == dict(reps[0].inner.scan())
 
 
 # ----------------------------------------------------------- RStore on top
