@@ -1,13 +1,36 @@
 """Benchmark driver: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
-writes JSON payloads under benchmarks/results/.  The dry-run/roofline sweep
+writes JSON payloads under benchmarks/results/.  An aggregate
+``BENCH_SUMMARY.json`` — per-bench headline metrics keyed by suite name,
+plus wall time and pass/fail status — lands at the repo root so a single
+file answers "what did the last bench run say".  The dry-run/roofline sweep
 (launch/dryrun.py) is separate — it needs the 512-device platform flag.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
+
+SUMMARY_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_SUMMARY.json"
+
+
+def _jsonable(obj):
+    """Best-effort conversion of bench payloads (numpy scalars etc.)."""
+    if obj is None:
+        return None
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    for t in (bool, int, float, str):
+        if isinstance(obj, t):
+            return t(obj)
+    if hasattr(obj, "item"):          # numpy scalar
+        return obj.item()
+    return repr(obj)
 
 
 def main() -> None:
@@ -15,7 +38,7 @@ def main() -> None:
                    bench_compaction, bench_fault_tolerance, bench_fig8_span,
                    bench_fig9_beta, bench_fig10_compression,
                    bench_fig11_query, bench_fig12_scaling, bench_fig13_online,
-                   bench_table1, bench_write_path)
+                   bench_secondary, bench_table1, bench_write_path)
 
     suites = [
         ("table1_costmodel", bench_table1.run),
@@ -29,19 +52,29 @@ def main() -> None:
         ("compaction", bench_compaction.run),
         ("fault_tolerance", bench_fault_tolerance.run),
         ("chunk_cache", bench_cache.run),
+        ("secondary_index", bench_secondary.run),
         ("fig12_scaling", bench_fig12_scaling.run),
         ("fig13_online", bench_fig13_online.run),
     ]
     print("name,us_per_call,derived")
     failures = 0
+    summary = {}
     for name, fn in suites:
         t0 = time.time()
         try:
-            fn()
-            print(f"suite/{name},{(time.time()-t0)*1e6:.0f},ok")
+            headline = fn()
+            wall = time.time() - t0
+            print(f"suite/{name},{wall*1e6:.0f},ok")
+            summary[name] = {"status": "ok", "wall_s": round(wall, 3),
+                             "headline": _jsonable(headline)}
         except Exception as e:  # noqa: BLE001
             failures += 1
+            wall = time.time() - t0
             print(f"suite/{name},0,FAILED:{type(e).__name__}:{e}")
+            summary[name] = {"status": f"FAILED:{type(e).__name__}:{e}",
+                             "wall_s": round(wall, 3), "headline": None}
+    SUMMARY_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+    print(f"# wrote {SUMMARY_PATH}")
     if failures:
         sys.exit(1)
 

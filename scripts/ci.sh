@@ -25,17 +25,24 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # cache serves the mixed-64 batch with 0 backend read round trips, (2) a
 # cold cache costs exactly the seed's round-trip counts — the layer adds
 # no traffic, (3) post-compaction reads through a warm cache stay
-# byte-identical to fresh uncached reads) — so a round-trip, availability,
-# or cache-coherence regression fails CI here instead of waiting for a
-# full benchmark run.
+# byte-identical to fresh uncached reads), and the secondary-index bench
+# asserts the filtered-scan contract (a selective Q.where fetches ≤25% of
+# the chunks and costs ≥4x fewer simulated seconds than the
+# full-version-fetch baseline on the same predicate, results byte-identical
+# to the brute-force filter, and warm cached filtered scans run with 0
+# backend read round trips) — so a round-trip, availability,
+# cache-coherence, or index-selectivity regression fails CI here instead
+# of waiting for a full benchmark run.
 echo "== bench smoke (round-trip regression gate) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
 from benchmarks import (bench_batched_query, bench_cache, bench_compaction,
-                        bench_fault_tolerance, bench_write_path)
+                        bench_fault_tolerance, bench_secondary,
+                        bench_write_path)
 bench_write_path.run(smoke=True)
 bench_batched_query.run(smoke=True)
 bench_compaction.run(smoke=True)
 bench_fault_tolerance.run(smoke=True)
 bench_cache.run(smoke=True)
+bench_secondary.run(smoke=True)
 print("bench smoke OK")
 EOF

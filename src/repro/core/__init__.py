@@ -13,6 +13,8 @@ from .replica import (BackendTimeout, BackendUnavailable, FaultInjectingKVS,
                       QuorumLost, RecoveryManager, RecoveryReport,
                       ReplicatedKVS, RetryPolicy, ShardDown,
                       TransientBackendError)
+from .secondary import (AttributeExtractor, SecondaryIndex,
+                        datagen_extractor, struct_extractor)
 from .types import Chunk, CompositeKey, Delta, Partitioning, Record
 from .version_graph import DeltaIds, RecordStore, VersionGraph
 
@@ -28,4 +30,6 @@ __all__ = [
     "BackendUnavailable", "TransientBackendError", "BackendTimeout",
     "ShardDown", "QuorumLost", "FaultInjectingKVS", "RetryPolicy",
     "ReplicatedKVS", "RecoveryManager", "RecoveryReport",
+    "AttributeExtractor", "SecondaryIndex", "struct_extractor",
+    "datagen_extractor",
 ]

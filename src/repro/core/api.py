@@ -30,6 +30,8 @@ Usage::
         Q.records(v3, [1, 2, 3]),
         Q.range(v3, 10, 19),
         Q.evolution(7),
+        Q.where(v3, "color", 2),         # needs rs.create_index("color", ...)
+        Q.where_range(v3, "size", 10, 20),
     ])
     results[0].value                     # {pk: payload, ...}
     results[0].stats                     # per-query QueryStats
@@ -65,6 +67,7 @@ import numpy as np
 from .chunkstore import ChunkMap, StoredChunk
 from .index import Projections
 from .kvs import Backend
+from .secondary import SecondaryIndex
 from .types import unpack_ck
 from .version_graph import VersionGraph
 
@@ -74,12 +77,14 @@ from .version_graph import VersionGraph
 class Query:
     """One retrieval request.  Build via the :class:`Q` factory."""
 
-    kind: str                            # version | record | records | range | evolution
+    kind: str          # version | record | records | range | evolution | where | where_range
     vid: Optional[int] = None
     pk: Optional[int] = None
     pks: Optional[Tuple[int, ...]] = None
-    key_lo: Optional[int] = None
+    key_lo: Optional[int] = None         # pk bound (range) / value bound (where_range)
     key_hi: Optional[int] = None
+    attr: Optional[str] = None           # secondary-index attribute (where*)
+    value: Optional[int] = None          # exact attribute value (where)
 
 
 class Q:
@@ -113,6 +118,23 @@ class Q:
         """Q3: every distinct record ever stored under ``pk`` →
         List[(origin_vid, bytes)] in origin order."""
         return Query(kind="evolution", pk=int(pk))
+
+    @staticmethod
+    def where(vid: int, attr: str, value: int) -> Query:
+        """Filtered scan: records of ``vid`` whose extracted ``attr`` equals
+        ``value`` → Dict[pk, bytes].  Needs a secondary index on ``attr``
+        (``rs.create_index``); results are exact — lossy chunk-granularity
+        postings are post-filtered against the fetched payloads."""
+        return Query(kind="where", vid=int(vid), attr=str(attr),
+                     value=int(value))
+
+    @staticmethod
+    def where_range(vid: int, attr: str, lo: int, hi: int) -> Query:
+        """Filtered scan: records of ``vid`` with extracted ``attr`` in
+        ``[lo, hi]`` → Dict[pk, bytes].  Same index + exactness contract as
+        :meth:`where`."""
+        return Query(kind="where_range", vid=int(vid), attr=str(attr),
+                     key_lo=int(lo), key_hi=int(hi))
 
 
 # -------------------------------------------------------------------- results
@@ -171,11 +193,14 @@ class Snapshot:
                  current_epoch: Optional[Callable[[], int]] = None,
                  layout_epoch: Optional[int] = None,
                  current_layout_epoch: Optional[Callable[[], int]] = None,
-                 repin: Optional[Callable[[], Tuple[Projections, int]]] = None,
+                 indexes: Optional[Dict[str, SecondaryIndex]] = None,
+                 repin: Optional[Callable[[], tuple]] = None,
                  ) -> None:
         self.graph = graph
         self.proj = proj
         self.kvs = kvs
+        # attr -> SecondaryIndex serving Q.where / Q.where_range plans
+        self.indexes: Dict[str, SecondaryIndex] = indexes or {}
         self._vidx = {v: i for i, v in enumerate(graph.versions)}
         # rebuild-epoch guard: a full build() repartitions and rewrites the
         # chunk/* and map/* keys, so chunk ids planned from this snapshot's
@@ -219,7 +244,11 @@ class Snapshot:
         if self._repin is None:
             raise RuntimeError("snapshot is not attached to a store; "
                                "take a new snapshot()")
-        self.proj, self._layout_epoch = self._repin()
+        pinned = self._repin()
+        if len(pinned) == 3:
+            self.proj, self.indexes, self._layout_epoch = pinned
+        else:  # older 2-tuple repin hooks (no secondary indexes)
+            self.proj, self._layout_epoch = pinned
         self._vidx = {v: i for i, v in enumerate(self.graph.versions)}
         return self
 
@@ -228,12 +257,15 @@ class Snapshot:
         """Candidate chunk ids per query — one vectorized pass.
 
         Version/evolution queries read their posting lists; all index-AND
-        queries (record/records/range) share a single pairwise bitmap-kernel
-        launch via ``Projections.candidates_batch``.
+        queries — primary (record/records/range) and secondary
+        (where/where_range) alike — share a single pairwise bitmap-kernel
+        launch via ``Projections.and_version_batch``: each query's posting
+        lists OR into one bitmap row that is ANDed against its version's
+        bitmap row.
         """
         empty = np.empty(0, np.int64)
         cands: List[Optional[np.ndarray]] = [None] * len(queries)
-        anding: List[Tuple[int, np.ndarray]] = []
+        anding: List[Tuple[int, List[Optional[np.ndarray]]]] = []
         anding_pos: List[int] = []
         for i, q in enumerate(queries):
             if q.vid is not None and self.graph.is_retired(q.vid):
@@ -242,24 +274,38 @@ class Snapshot:
                     "its content is no longer queryable")
             if q.kind == "version":
                 cands[i] = self.proj.chunks_for_version(q.vid)
-            elif q.kind == "evolution":
+                continue
+            if q.kind == "evolution":
                 cands[i] = self.proj.chunks_for_key(q.pk)
-            else:
+                continue
+            if q.kind in ("where", "where_range"):
+                idx = self.indexes.get(q.attr)
+                if idx is None:
+                    raise KeyError(
+                        f"no secondary index on attribute {q.attr!r}; "
+                        "register one with rs.create_index(attr, extractor)")
+                if q.kind == "where":
+                    postings = [idx.postings_for(q.value)]
+                else:
+                    postings = idx.postings_in_range(q.key_lo, q.key_hi)
+            elif q.kind in ("record", "records", "range"):
                 if q.kind == "record":
                     pks = np.asarray([q.pk], dtype=np.int64)
                 elif q.kind == "records":
                     pks = np.asarray(q.pks, dtype=np.int64)
-                elif q.kind == "range":
+                else:
                     pks = self.proj.keys_in_range(q.key_lo, q.key_hi)
-                else:
-                    raise ValueError(f"unknown query kind {q.kind!r}")
-                if len(pks) == 0:
-                    cands[i] = empty
-                else:
-                    anding.append((q.vid, pks))
-                    anding_pos.append(i)
+                postings = [self.proj.key_chunks.get(int(p)) for p in pks]
+            else:
+                raise ValueError(f"unknown query kind {q.kind!r}")
+            if not any(p is not None and len(p) for p in postings):
+                cands[i] = empty
+            else:
+                anding.append((q.vid, postings))
+                anding_pos.append(i)
         if anding:
-            for pos, ids in zip(anding_pos, self.proj.candidates_batch(anding)):
+            for pos, ids in zip(anding_pos,
+                                self.proj.and_version_batch(anding)):
                 cands[pos] = ids
         return cands  # type: ignore[return-value]
 
@@ -459,6 +505,39 @@ class Snapshot:
             stats.records_returned = len(out)
             if q.kind == "record":
                 return out.get(q.pk)
+            return out
+
+        if q.kind in ("where", "where_range"):
+            # exact post-filter: the lossy postings only say a chunk *may*
+            # hold a match (the record copies could be dead, live in other
+            # versions only, or share a chunk with the real match) — so the
+            # attribute is re-extracted from every record live in vid and
+            # the predicate applied exactly.  Lossiness never leaks.
+            idx = self.indexes[q.attr]
+            vidx = self._vidx[q.vid]
+            out = {}
+            for c in cand:
+                cid = int(c)
+                cmap = fetched[cid][1]
+                locs = _members(cid, vidx)
+                if len(locs) == 0:
+                    stats.irrelevant_chunks += 1
+                    continue
+                pay = _payloads(cid)
+                hit = False
+                for li in locs:
+                    p = pay[int(li)]
+                    v = idx.extractor(p).get(q.attr)
+                    if v is None:
+                        continue
+                    if (v == q.value if q.kind == "where"
+                            else q.key_lo <= v <= q.key_hi):
+                        pk, _ = unpack_ck(int(cmap.cks[li]))
+                        out[pk] = p
+                        hit = True
+                if not hit:
+                    stats.irrelevant_chunks += 1
+            stats.records_returned = len(out)
             return out
 
         if q.kind == "evolution":

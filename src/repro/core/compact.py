@@ -354,10 +354,22 @@ class Compactor:
         writes = rs._stage_chunk_writes(part.chunks, vidx_of, nv, csr)
         bytes_written = sum(rs._chunk_bytes[c.chunk_id] for c in part.chunks)
 
-        s0 = rs.kvs.stats.snapshot()
-        rs.kvs.multiput(writes)
         del_keys = [k for c in cands
                     for k in (f"chunk/{int(c)}", f"map/{int(c)}")]
+        # secondary indexes: retire the candidates' postings, extend for the
+        # rewritten chunks — dirty idx2/ buckets ride the same multiput, and
+        # buckets emptied by the pass join the same multidelete (no orphans)
+        if rs._indexes:
+            new_chunks = [(c.chunk_id, c.record_ids) for c in part.chunks]
+            for idx in rs._indexes.values():
+                idx.remove_chunks(int(c) for c in cands)
+                idx.add_chunks(new_chunks, graph.store.payload)
+                iw, idel = idx.stage_writes()
+                writes.extend(iw)
+                del_keys.extend(idel)
+
+        s0 = rs.kvs.stats.snapshot()
+        rs.kvs.multiput(writes)
         rs.kvs.multidelete(del_keys)
         write_rts = rs.kvs.stats.n_put_queries - s0.n_put_queries
         delete_rts = rs.kvs.stats.n_delete_queries - s0.n_delete_queries

@@ -39,8 +39,14 @@ class DatasetSpec:
     size_sigma: float = 0.0           # lognormal sigma (0 = fixed size)
     p_d: Optional[float] = None       # bounded per-record change (compression)
     branch_prob: float = 0.0          # 0 → linear chain (dataset A/B family)
-    merge_prob: float = 0.0           # DAG merges (exercises Fig. 4 conversion)
+    merge_prob: float = 0.0          # DAG merges (exercises Fig. 4 conversion)
     payloads: bool = False
+    # structured prefix for secondary-index experiments: the first
+    # 4*attr_fields bytes of every payload are little-endian uint32
+    # attribute values drawn uniformly from [0, attr_cardinality) — the
+    # layout core/secondary.py's datagen_extractor(attr_fields) reads
+    attr_fields: int = 0
+    attr_cardinality: int = 256
     seed: int = 0
 
     def label(self) -> str:
@@ -89,14 +95,25 @@ def _sizes(rng: np.random.Generator, n: int, spec: DatasetSpec) -> np.ndarray:
     return np.maximum(8, s).astype(np.int64)
 
 
-def _payload(rng: np.random.Generator, size: int) -> bytes:
-    return rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+def _payload(rng: np.random.Generator, size: int,
+             spec: Optional[DatasetSpec] = None) -> bytes:
+    raw = rng.integers(0, 256, size=size, dtype=np.uint8)
+    if spec is not None and spec.attr_fields > 0:
+        vals = rng.integers(0, spec.attr_cardinality,
+                            size=spec.attr_fields, dtype=np.uint32)
+        pre = np.frombuffer(vals.astype("<u4").tobytes(), dtype=np.uint8)
+        if len(raw) < len(pre):       # payload grows to fit the attr prefix
+            raw = np.concatenate([raw, np.zeros(len(pre) - len(raw),
+                                                np.uint8)])
+        raw[:len(pre)] = pre
+    return raw.tobytes()
 
 
-def _mutate(rng: np.random.Generator, parent: bytes, p_d: Optional[float]) -> bytes:
+def _mutate(rng: np.random.Generator, parent: bytes, p_d: Optional[float],
+            spec: Optional[DatasetSpec] = None) -> bytes:
     """Child payload: contiguous block rewrite bounded by P_d (or full rewrite)."""
     if p_d is None:
-        return _payload(rng, len(parent))
+        return _payload(rng, len(parent), spec)
     n = len(parent)
     span = max(1, int(n * p_d))
     off = int(rng.integers(0, max(1, n - span + 1)))
@@ -115,7 +132,8 @@ def generate(spec: DatasetSpec) -> VersionGraph:
     keys0 = np.arange(n0, dtype=np.int64)
     cks0 = pack_ck_array(keys0, np.zeros(n0, dtype=np.int64))
     sizes0 = _sizes(rng, n0, spec)
-    payloads0 = [_payload(rng, int(s)) for s in sizes0] if spec.payloads else None
+    payloads0 = ([_payload(rng, int(s), spec) for s in sizes0]
+                 if spec.payloads else None)
     rids0 = store.add_batch(cks0, sizes0, payloads0)
     graph.add_root(0, rids0)
 
@@ -180,8 +198,9 @@ def generate(spec: DatasetSpec) -> VersionGraph:
         add_payloads = None
         if spec.payloads:
             add_payloads = [
-                _mutate(rng, store.payload(pmap[int(k)]), spec.p_d) for k in mod_keys
-            ] + [_payload(rng, int(s)) for s in add_sizes[n_mod:]]
+                _mutate(rng, store.payload(pmap[int(k)]), spec.p_d, spec)
+                for k in mod_keys
+            ] + [_payload(rng, int(s), spec) for s in add_sizes[n_mod:]]
         add_rids = store.add_batch(add_cks, add_sizes, add_payloads)
 
         del_rids = np.array(

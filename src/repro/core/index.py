@@ -29,38 +29,64 @@ from .version_graph import VersionGraph
 
 # ------------------------------------------------------------------- varints
 def varint_encode(arr: np.ndarray) -> bytes:
-    """Delta + LEB128 varint encoding of a sorted non-negative int array."""
-    out = bytearray()
-    prev = 0
-    for x in arr.tolist():
-        d = x - prev
-        prev = x
-        while True:
-            b = d & 0x7F
-            d >>= 7
-            if d:
-                out.append(b | 0x80)
-            else:
-                out.append(b)
-                break
-    return bytes(out)
+    """Delta + LEB128 varint encoding of a sorted non-negative int array.
+
+    Vectorized: byte counts, byte values, and continuation bits are computed
+    for the whole array at once; the only Python loop is over the (≤10)
+    byte *positions* of the widest delta, not over array elements.  The byte
+    format is the classic little-endian 7-bit-group LEB128 the original
+    per-element loop produced.
+    """
+    a = np.asarray(arr, dtype=np.int64)
+    if len(a) == 0:
+        return b""
+    d = np.empty(len(a), dtype=np.uint64)
+    d[0] = a[0]
+    np.subtract(a[1:], a[:-1], out=d[1:], casting="unsafe")
+    # bytes needed per delta: ceil(bit_length / 7), minimum 1
+    nbytes = np.ones(len(d), dtype=np.int64)
+    rest = d >> np.uint64(7)
+    while rest.any():
+        nbytes += (rest > 0)
+        rest >>= np.uint64(7)
+    ends = np.cumsum(nbytes)
+    starts = ends - nbytes
+    out = np.empty(int(ends[-1]), dtype=np.uint8)
+    for j in range(int(nbytes.max())):
+        m = nbytes > j
+        b = ((d[m] >> np.uint64(7 * j)) & np.uint64(0x7F)).astype(np.uint8)
+        cont = (nbytes[m] - 1 > j).astype(np.uint8) << 7
+        out[starts[m] + j] = b | cont
+    return out.tobytes()
 
 
 def varint_decode(buf: bytes) -> np.ndarray:
-    out: List[int] = []
-    acc = 0
-    shift = 0
-    prev = 0
-    for byte in buf:
-        acc |= (byte & 0x7F) << shift
-        if byte & 0x80:
-            shift += 7
-        else:
-            prev += acc
-            out.append(prev)
-            acc = 0
-            shift = 0
-    return np.asarray(out, dtype=np.int64)
+    """Inverse of :func:`varint_encode` (vectorized).
+
+    Each encoded group's bytes are OR'd into its value in one scatter per
+    byte *position*; a trailing incomplete group (continuation bit set on
+    the final byte) is discarded, matching the original decoder.
+    """
+    a = np.frombuffer(buf, dtype=np.uint8)
+    if len(a) == 0:
+        return np.empty(0, dtype=np.int64)
+    is_last = (a & 0x80) == 0
+    n_groups = int(is_last.sum())
+    # group index of every byte: groups end at terminator bytes
+    grp = np.zeros(len(a), dtype=np.int64)
+    grp[1:] = np.cumsum(is_last[:-1])
+    idx = np.arange(len(a), dtype=np.int64)
+    group_start = np.empty(n_groups + 1, dtype=np.int64)
+    group_start[0] = 0
+    group_start[1:] = idx[is_last] + 1
+    pos = idx - group_start[grp]
+    vals = np.zeros(n_groups, dtype=np.uint64)
+    complete = grp < n_groups          # drop a trailing incomplete group
+    np.bitwise_or.at(
+        vals, grp[complete],
+        (a[complete] & np.uint8(0x7F)).astype(np.uint64)
+        << (np.uint64(7) * pos[complete].astype(np.uint64)))
+    return np.cumsum(vals.astype(np.int64))
 
 
 # --------------------------------------------------------------- projections
@@ -69,10 +95,14 @@ class Projections:
     version_chunks: Dict[int, np.ndarray]   # vid -> sorted chunk ids
     key_chunks: Dict[int, np.ndarray]       # pk  -> sorted chunk ids
     n_chunks: int
-    # sorted primary-key array (lazy cache) backing O(log n) range lookups;
-    # invalidated whenever key_chunks gains keys
+    # sorted primary-key array (lazy cache) backing O(log n) range lookups.
+    # Staleness contract: the cache covers the key *set* only (not the
+    # posting lists), and _keys_dirty is set explicitly by every mutation
+    # that can grow the key set (extend_keys) — adding chunks to an
+    # *existing* key leaves the cache valid and does not rebuild it.
     _sorted_keys: Optional[np.ndarray] = field(default=None, repr=False,
                                                compare=False)
+    _keys_dirty: bool = field(default=True, repr=False, compare=False)
 
     # -------------------------------------------------------------- building
     @staticmethod
@@ -135,11 +165,26 @@ class Projections:
         """Plan a whole batch of index-AND queries in ONE kernel launch.
 
         ``items`` is a list of ``(vid, pks)`` pairs — one per point/multi-
-        point/range query in a session.  Per query, the key bitmaps are OR'd
-        on the host (cheap: W words each) into one row; the N OR'd key rows
-        are then AND'd pairwise against the N version rows by a single
-        ``and_popcount_batch`` call (the (N, W) & (N, W) kernel path).
-        Returns one sorted chunk-id array per item.
+        point/range query in a session.  Per query, the key posting lists
+        are OR'd on the host (cheap: W words each) into one row; the rest
+        is :meth:`and_version_batch`.
+        """
+        return self.and_version_batch(
+            [(vid, [self.key_chunks.get(pk) for pk in pks])
+             for vid, pks in items])
+
+    def and_version_batch(
+            self, items: Sequence[Tuple[int, Sequence[Optional[np.ndarray]]]],
+    ) -> List[np.ndarray]:
+        """AND arbitrary chunk-id posting lists against version bitmaps in
+        ONE pairwise kernel launch.
+
+        Each item is ``(vid, posting_lists)``: the posting lists (any
+        chunk-granularity source — primary-key postings, secondary-attribute
+        postings; ``None``/empty entries allowed) are OR'd into one bitmap
+        row, and the N OR'd rows are AND'd pairwise against the N version
+        rows by a single ``and_popcount_batch`` call (the (N, W) & (N, W)
+        kernel path).  Returns one sorted chunk-id array per item.
         """
         if not items:
             return []
@@ -147,10 +192,9 @@ class Projections:
         key_rows = np.zeros((len(items), max(W, 1)), dtype=np.uint32)
         ver_rows = np.zeros((len(items), max(W, 1)), dtype=np.uint32)
         nonempty = np.zeros(len(items), dtype=bool)
-        for i, (vid, pks) in enumerate(items):
+        for i, (vid, postings) in enumerate(items):
             ver_rows[i] = self._bitmap_of(self.version_chunks[vid])
-            for pk in pks:
-                ids = self.key_chunks.get(pk)
+            for ids in postings:
                 if ids is not None and len(ids):
                     np.bitwise_or.at(key_rows[i], ids // 32,
                                      np.uint32(1) << (ids % 32).astype(np.uint32))
@@ -162,10 +206,18 @@ class Projections:
 
     # ----------------------------------------------------------- key ranges
     def sorted_keys(self) -> np.ndarray:
-        """All indexed primary keys, sorted (cached; see extend_keys)."""
-        if self._sorted_keys is None or len(self._sorted_keys) != len(self.key_chunks):
+        """All indexed primary keys, sorted.
+
+        Cached behind an explicit dirty flag: ``extend_keys`` marks the
+        cache dirty exactly when it adds a primary key the index did not
+        hold before (the earlier ``len(...) != len(...)`` heuristic could
+        not distinguish "new keys" from "same keys, more chunks", and would
+        silently go stale on any future mutation that swapped keys while
+        preserving the count)."""
+        if self._sorted_keys is None or self._keys_dirty:
             self._sorted_keys = np.sort(np.fromiter(
                 self.key_chunks.keys(), dtype=np.int64, count=len(self.key_chunks)))
+            self._keys_dirty = False
         return self._sorted_keys
 
     def keys_in_range(self, key_lo: int, key_hi: int) -> np.ndarray:
@@ -205,8 +257,12 @@ class Projections:
     def extend_keys(self, pk_to_chunks: Dict[int, np.ndarray]) -> None:
         for pk, cs in pk_to_chunks.items():
             old = self.key_chunks.get(pk)
-            self.key_chunks[pk] = np.unique(cs) if old is None else \
-                np.union1d(old, cs)
+            if old is None:
+                self.key_chunks[pk] = np.unique(cs)
+                self._keys_dirty = True      # key set grew: sorted cache stale
+            else:
+                # same key set, more chunks: sorted_keys cache stays valid
+                self.key_chunks[pk] = np.union1d(old, cs)
 
     def grow(self, n_chunks: int) -> None:
         self.n_chunks = max(self.n_chunks, n_chunks)

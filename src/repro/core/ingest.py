@@ -57,6 +57,7 @@ from .kvs import Backend, InMemoryKVS
 from .online import affected_old_chunks, partition_batch
 from .partition import ALGORITHMS
 from .api import BatchResult, Q, Snapshot
+from .secondary import AttributeExtractor, SecondaryIndex
 from .subchunk import (build_subchunks, build_transformed,
                        compressed_subchunk_sizes)
 from .types import _MAX_PART, Chunk, Partitioning, pack_ck_array
@@ -179,6 +180,9 @@ class RStore:
         # stale (memory is bounded by total membership size, same order as
         # the graph's own materialized memberships)
         self._pk_arrays: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        # attr -> SecondaryIndex (see core/secondary.py); every mutation
+        # path below keeps postings coherent inside its own round trips
+        self._indexes: Dict[str, SecondaryIndex] = {}
         self._writer: Optional[WriteSession] = None
 
     # ------------------------------------------------------------- sessions
@@ -412,6 +416,15 @@ class RStore:
             _, cmap = build_chunk(self.graph, self._chunk_records[cid], cid,
                                   vidx_of, nv, csr)
             writes.append((f"map/{cid}", cmap.to_bytes()))
+        # secondary indexes: extend postings for the batch's new chunks —
+        # dirty idx2/ buckets ride the same group commit
+        if self._indexes:
+            new_chunks = [(c.chunk_id, c.record_ids) for c in part.chunks]
+            for idx in self._indexes.values():
+                idx.add_chunks(new_chunks, self.graph.store.payload)
+                iw, idel = idx.stage_writes()
+                writes.extend(iw)
+                assert not idel, "appending chunks never empties a bucket"
         self.kvs.multiput(writes)
         self._flushed_versions = self.graph.num_versions
 
@@ -457,15 +470,22 @@ class RStore:
         self._chunk_bytes = {}
         writes = self._stage_chunk_writes(part.chunks, vidx_of, nv, csr,
                                           sub_groups_of)
-        self.kvs.multiput(writes)      # one group commit, even for rebuilds
         # GC: chunk ids of the previous layout that the rebuild did not
         # reuse would otherwise stay in the KVS forever (a rebuild can
         # shrink the chunk count — especially after retention pruning)
         stale = sorted(old_ids - set(self._chunk_records))
-        self.kvs.multidelete(
-            [k for c in stale for k in (f"chunk/{c}", f"map/{c}")])
-        self._notify_layout_change(
-            [k for c in stale for k in (f"chunk/{c}", f"map/{c}")])
+        stale_keys = [k for c in stale for k in (f"chunk/{c}", f"map/{c}")]
+        # secondary indexes: recompute postings over the new layout inside
+        # the same group commit; buckets that emptied out (all their values
+        # lived only in retired versions) join the stale-key GC
+        for idx in self._indexes.values():
+            idx.rebuild(self._chunk_records, graph.store.payload)
+            iw, idel = idx.stage_writes()
+            writes.extend(iw)
+            stale_keys.extend(idel)
+        self.kvs.multiput(writes)      # one group commit, even for rebuilds
+        self.kvs.multidelete(stale_keys)
+        self._notify_layout_change(stale_keys)
         self._flushed_versions = graph.num_versions
         return part
 
@@ -515,6 +535,40 @@ class RStore:
     @property
     def layout_epoch(self) -> int:
         return self._layout_epoch
+
+    # --------------------------------------------------- secondary indexes
+    def create_index(self, attr: str, extractor: AttributeExtractor,
+                     n_buckets: int = 16) -> SecondaryIndex:
+        """Register a secondary index on ``attr`` (see
+        :mod:`repro.core.secondary`).  Existing chunks are indexed now (one
+        ``multiput`` of the ``idx2/{attr}/*`` buckets); every later flush /
+        build / compaction keeps the postings coherent inside its own round
+        trips.  Enables ``Q.where(vid, attr, value)`` and
+        ``Q.where_range(vid, attr, lo, hi)`` on snapshots."""
+        if attr in self._indexes:
+            raise ValueError(f"secondary index on {attr!r} already exists")
+        if not self.config.store_payloads:
+            raise RuntimeError(
+                "secondary indexes need store_payloads=True — attribute "
+                "extraction reads record payloads")
+        idx = SecondaryIndex(attr, extractor, n_buckets=n_buckets)
+        if self._chunk_records:
+            idx.add_chunks(sorted(self._chunk_records.items()),
+                           self.graph.store.payload)
+            writes, _ = idx.stage_writes()
+            self.kvs.multiput(writes)
+        self._indexes[attr] = idx
+        return idx
+
+    def drop_index(self, attr: str) -> None:
+        """Unregister the index on ``attr`` and GC its ``idx2/`` keys (one
+        ``multidelete``).  Raises ``KeyError`` if no such index exists."""
+        idx = self._indexes.pop(attr)
+        self.kvs.multidelete(idx.stored_keys())
+
+    @property
+    def indexes(self) -> Dict[str, SecondaryIndex]:
+        return dict(self._indexes)
 
     # --------------------------------------------------------- cache layer
     def _cache(self):
@@ -568,7 +622,9 @@ class RStore:
                         current_epoch=lambda: self._build_epoch,
                         layout_epoch=self._layout_epoch,
                         current_layout_epoch=lambda: self._layout_epoch,
-                        repin=lambda: (self.proj, self._layout_epoch))
+                        indexes=self._indexes,
+                        repin=lambda: (self.proj, self._indexes,
+                                       self._layout_epoch))
 
     def execute(self, queries) -> "BatchResult":
         """Run a batch of queries against a fresh snapshot (convenience)."""
@@ -609,6 +665,11 @@ class RStore:
         }
         if self.proj is not None:
             out.update(self.proj.compressed_size())
+        if self._indexes:
+            out["secondary_index_bytes"] = int(sum(
+                idx.stored_bytes() for idx in self._indexes.values()))
+            out["secondary_indexes"] = {
+                attr: idx.report() for attr, idx in self._indexes.items()}
         cache = self.cache_stats()
         if cache is not None:
             out["cache"] = cache

@@ -8,7 +8,7 @@ import pytest
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core import CachingKVS, RStore, RStoreConfig, keep_last
+from repro.core import CachingKVS, Q, RStore, RStoreConfig, keep_last
 from repro.core.kvs import InMemoryKVS, ShardedKVS
 from repro.core.replica import (FaultInjectingKVS, RecoveryManager,
                                 ReplicatedKVS)
@@ -489,3 +489,126 @@ _CACHE_EXAMPLES = [
                          ids=["tiny-budget", "kill-warm", "k3-rebuild"])
 def test_cached_coherence_fixed_examples(w, fp, cp):
     _check_cached_coherent(w, fp, cp)
+
+
+# --------------------------------------------- secondary index coherence
+def _tag_extractor(payload: bytes) -> dict:
+    # low cardinality (4 values) so postings stay dense across random payloads
+    return {"tag": payload[0] % 4}
+
+
+def _check_secondary_coherent(w, fp):
+    """Body of test_secondary_index_byte_identical_under_interleavings,
+    callable with concrete (workload, fault-plan) dicts — also exercised by
+    test_secondary_fixed_examples when hypothesis is absent."""
+    cfg = dict(algorithm=w["algorithm"], capacity=w["capacity"], k=w["k"],
+               batch_size=w["batch"])
+    R, n_shards = fp["R"], fp["n_shards"]
+
+    # oracle: plain in-memory, UNINDEXED store — every Q.where answer is
+    # checked against a brute-force full-version scan + exact filter here
+    probes0 = []
+    rs0 = RStore(RStoreConfig(**cfg), kvs=InMemoryKVS())
+
+    def probe0(vids):
+        full, _ = rs0.get_version(vids[-1])
+        probes0.append([{pk: p for pk, p in full.items()
+                         if _tag_extractor(p)["tag"] == t}
+                        for t in range(4)])
+
+    vids0 = _run_steps(rs0, np.random.default_rng(w["seed"]), w["steps"],
+                       lambda i: None, probe=probe0)
+
+    # subject: indexed store over a replicated (optionally sharded,
+    # optionally faulty/killed) backend, same interleaving, same probes —
+    # but answered through the secondary index
+    groups = [ReplicatedKVS(
+        [FaultInjectingKVS(InMemoryKVS(), seed=fp["seed"] + i * R + r,
+                           p_transient=fp["p_transient"],
+                           p_timeout=fp["p_timeout"])
+         for r in range(R)], write_quorum=1) for i in range(n_shards)]
+    kvs1 = groups[0] if n_shards == 1 else ShardedKVS(groups)
+    rs1 = RStore(RStoreConfig(**cfg), kvs=kvs1)
+    rs1.create_index("tag", _tag_extractor, n_buckets=3)
+    kill_at = fp["kill_step"] % len(w["steps"]) if fp["kill"] else None
+    probes1 = []
+
+    def on_step(i):
+        if i == kill_at:
+            for g in groups:
+                g.replicas[0].kill()
+
+    def probe1(vids):
+        res = rs1.snapshot().execute(
+            [Q.where(vids[-1], "tag", t) for t in range(4)])
+        probes1.append([r.value for r in res])
+
+    vids1 = _run_steps(rs1, np.random.default_rng(w["seed"]), w["steps"],
+                       on_step, probe=probe1)
+
+    # identical interleaving → identical version ids, and every mid-run
+    # filtered scan was byte-identical to the brute-force oracle
+    assert vids1 == vids0
+    assert probes1 == probes0
+
+    # final sweep: where + where_range on the newest retained version
+    snap = rs1.snapshot()
+    full, _ = rs0.get_version(vids0[-1])
+    for t in range(4):
+        got = snap.execute([Q.where(vids0[-1], "tag", t)])[0].value
+        assert got == {pk: p for pk, p in full.items()
+                       if _tag_extractor(p)["tag"] == t}
+    got = snap.execute([Q.where_range(vids0[-1], "tag", 1, 2)])[0].value
+    assert got == {pk: p for pk, p in full.items()
+                   if 1 <= _tag_extractor(p)["tag"] <= 2}
+
+    # after one more compaction pass: zero orphaned idx2/ keys — the
+    # backend's idx2/ key set is exactly the index's live bucket set, and
+    # every posting references a stored chunk
+    rs1.compact(liveness_threshold=1.0)
+    idx = rs1._indexes["tag"]
+    stored_idx_keys = {k for k, _ in kvs1.scan() if k.startswith("idx2/")}
+    assert stored_idx_keys == set(idx.stored_keys())
+    live_cids = set(rs1._chunk_records)
+    for postings in idx.postings.values():
+        assert set(postings.tolist()) <= live_cids
+
+
+@given(maintenance_workload(), fault_plan())
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_secondary_index_byte_identical_under_interleavings(w, fp):
+    """For ANY interleaving of commit waves, retention prunings, compaction
+    passes, and replica kills, `Q.where` through a secondary index is
+    byte-identical to a brute-force full-scan oracle — mid-run after every
+    step and at the end (where + where_range) — and a compaction pass leaves
+    zero orphaned idx2/ keys in the backend."""
+    _check_secondary_coherent(w, fp)
+
+
+# fixed corner examples so the contract is still exercised when hypothesis
+# is unavailable (conftest shims @given into a skip)
+_SECONDARY_EXAMPLES = [
+    # retention + two compact passes on a replicated shard: postings must
+    # shed retired chunks without orphaning buckets
+    ({"algorithm": "bottom_up", "k": 1, "batch": 3, "capacity": 512,
+      "n_shards": 0, "seed": 71,
+      "steps": [("commits", 4), ("compact", 0.6), ("retain", 3),
+                ("commits", 3), ("compact", 1.0)]},
+     {"R": 2, "n_shards": 1, "p_transient": 0.15, "p_timeout": 0.0,
+      "kill": False, "kill_step": 0, "seed": 73}),
+    # k>1 (index maintenance rides the full-rebuild path) + replica kill
+    # mid-run on a sharded router
+    ({"algorithm": "shingle", "k": 3, "batch": 2, "capacity": 2048,
+      "n_shards": 0, "seed": 79,
+      "steps": [("commits", 5), ("retain", 4), ("compact", 1.0),
+                ("commits", 2)]},
+     {"R": 3, "n_shards": 3, "p_transient": 0.0, "p_timeout": 0.15,
+      "kill": True, "kill_step": 1, "seed": 83}),
+]
+
+
+@pytest.mark.parametrize("w,fp", _SECONDARY_EXAMPLES,
+                         ids=["retain-compact", "k3-kill"])
+def test_secondary_fixed_examples(w, fp):
+    _check_secondary_coherent(w, fp)
