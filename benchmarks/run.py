@@ -34,9 +34,9 @@ def _jsonable(obj):
 
 
 def main() -> None:
-    from . import (bench_batched_query, bench_cache, bench_chunksize,
-                   bench_compaction, bench_fault_tolerance, bench_fig8_span,
-                   bench_fig9_beta, bench_fig10_compression,
+    from . import (bench_async_ingest, bench_batched_query, bench_cache,
+                   bench_chunksize, bench_compaction, bench_fault_tolerance,
+                   bench_fig8_span, bench_fig9_beta, bench_fig10_compression,
                    bench_fig11_query, bench_fig12_scaling, bench_fig13_online,
                    bench_secondary, bench_table1, bench_write_path)
 
@@ -49,6 +49,7 @@ def main() -> None:
         ("fig11_query", bench_fig11_query.run),
         ("batched_query", bench_batched_query.run),
         ("write_path", bench_write_path.run),
+        ("async_ingest", bench_async_ingest.run),
         ("compaction", bench_compaction.run),
         ("fault_tolerance", bench_fault_tolerance.run),
         ("chunk_cache", bench_cache.run),

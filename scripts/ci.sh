@@ -30,15 +30,23 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # the chunks and costs ≥4x fewer simulated seconds than the
 # full-version-fetch baseline on the same predicate, results byte-identical
 # to the brute-force filter, and warm cached filtered scans run with 0
-# backend read round trips) — so a round-trip, availability,
-# cache-coherence, or index-selectivity regression fails CI here instead
-# of waiting for a full benchmark run.
+# backend read round trips), and the async-ingest bench asserts the
+# background-flusher contract (8 concurrent sessions staging versions at 0
+# backend round trips per commit, one cross-session drain costing ≤1 write
+# round trip per shard, ≥3x lower simulated write seconds than per-session
+# synchronous flushes, and the same workload on replicated shards with one
+# replica of every group killed mid-drain staying byte-identical to a
+# synchronous-flush oracle with recover_all converging every replica) — so
+# a round-trip, availability, cache-coherence, index-selectivity, or
+# ingest-batching regression fails CI here instead of waiting for a full
+# benchmark run.
 echo "== bench smoke (round-trip regression gate) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
-from benchmarks import (bench_batched_query, bench_cache, bench_compaction,
-                        bench_fault_tolerance, bench_secondary,
-                        bench_write_path)
+from benchmarks import (bench_async_ingest, bench_batched_query, bench_cache,
+                        bench_compaction, bench_fault_tolerance,
+                        bench_secondary, bench_write_path)
 bench_write_path.run(smoke=True)
+bench_async_ingest.run(smoke=True)
 bench_batched_query.run(smoke=True)
 bench_compaction.run(smoke=True)
 bench_fault_tolerance.run(smoke=True)

@@ -6,6 +6,7 @@ from .compact import (CompactionReport, Compactor, LayoutHealth,
                       RetentionPolicy, keep_all, keep_last, keep_tagged,
                       measure_layout)
 from .datagen import PAPER_DATASETS, DatasetSpec, dataset_stats, generate
+from .flusher import BackgroundFlusher, DrainReport
 from .ingest import RStore, RStoreConfig, WriteSession
 from .kvs import (Backend, InMemoryKVS, KVSStats, ShardedDeviceKVS,
                   ShardedKVS)
@@ -23,7 +24,8 @@ __all__ = [
     "CompositeKey", "Record", "Delta", "Chunk", "Partitioning",
     "DatasetSpec", "PAPER_DATASETS", "generate", "dataset_stats",
     "Q", "Query", "QueryResult", "QueryStats", "BatchResult", "Snapshot",
-    "WriteSession", "Backend", "InMemoryKVS", "KVSStats", "ShardedKVS",
+    "WriteSession", "BackgroundFlusher", "DrainReport",
+    "Backend", "InMemoryKVS", "KVSStats", "ShardedKVS",
     "ShardedDeviceKVS", "CachingKVS",
     "Compactor", "CompactionReport", "LayoutHealth", "RetentionPolicy",
     "keep_all", "keep_last", "keep_tagged", "measure_layout",

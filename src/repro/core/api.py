@@ -195,10 +195,16 @@ class Snapshot:
                  current_layout_epoch: Optional[Callable[[], int]] = None,
                  indexes: Optional[Dict[str, SecondaryIndex]] = None,
                  repin: Optional[Callable[[], tuple]] = None,
+                 staleness_lag: int = 0,
                  ) -> None:
         self.graph = graph
         self.proj = proj
         self.kvs = kvs
+        # async ingest (core/flusher.py): committed-but-not-durable versions
+        # at snapshot time.  0 for fresh (read-your-writes) snapshots; a
+        # pinned snapshot reports how far behind the durable state it runs.
+        # Staged versions are invisible to it — querying one fails loudly.
+        self.staleness_lag = int(staleness_lag)
         # attr -> SecondaryIndex serving Q.where / Q.where_range plans
         self.indexes: Dict[str, SecondaryIndex] = indexes or {}
         self._vidx = {v: i for i, v in enumerate(graph.versions)}

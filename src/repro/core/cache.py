@@ -97,6 +97,7 @@ class CachingKVS:
         self.n_evictions = 0
         self.n_admit_rejected = 0
         self.n_invalidations = 0
+        self.n_write_through = 0    # write-through re-admissions (per key)
 
     # ---------------------------------------------------------------- sizing
 
@@ -320,6 +321,7 @@ class CachingKVS:
         for k, v in items:
             if k in was_cached:
                 self._force_admit(k, v)
+                self.n_write_through += 1
 
     def _force_admit(self, key: str, value: bytes) -> None:
         """Write-through re-admission: skip the cost comparison (the entry
@@ -371,5 +373,6 @@ class CachingKVS:
             "n_evictions": self.n_evictions,
             "n_admit_rejected": self.n_admit_rejected,
             "n_invalidations": self.n_invalidations,
+            "n_write_through": self.n_write_through,
             "layout_epoch": self.layout_epoch,
         }

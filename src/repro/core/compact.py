@@ -304,7 +304,13 @@ class Compactor:
         """
         rs = self.rs
         rs._check_no_open_writer("compact()")
-        if rs.pending:
+        if rs._flusher is not None:
+            # drain barrier (async ingest): staged versions — and any
+            # replay held from a failed drain — land in the OLD layout
+            # before the pass rewrites it, so a later replay can never
+            # resurrect keys this pass deletes
+            rs._flusher.drain()
+        elif rs.pending:
             if rs.config.auto_flush:
                 rs.flush()
             else:

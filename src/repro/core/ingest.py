@@ -98,11 +98,21 @@ class WriteSession:
     wrappers count), and committing after ``close()`` raises.  If the
     ``with`` body raises, the flush is skipped — staged versions stay in
     the delta store and the next flush picks them up.
+
+    With a :class:`~repro.core.flusher.BackgroundFlusher` attached
+    (async ingest) the rules change: any number of sessions may be open
+    concurrently, every ``commit()`` stages at zero round trips into the
+    flusher's active buffer, and durability is the flusher's job
+    (watermarks / ``rs.barrier()``) — ``close()`` does not flush, and an
+    exception in the ``with`` body just closes the session (staged
+    commits may already be durable; there is no per-session abort).
     """
 
-    def __init__(self, rs: "RStore", flush_on_close: bool = True) -> None:
+    def __init__(self, rs: "RStore", flush_on_close: bool = True,
+                 async_mode: bool = False) -> None:
         self._rs = rs
         self._flush_on_close = flush_on_close
+        self._async = async_mode
         self._closed = False
         self.staged: List[int] = []        # vids committed through this session
 
@@ -127,11 +137,44 @@ class WriteSession:
         return vid
 
     # --------------------------------------------------------------- flush
+    def flush(self) -> None:
+        """Explicit early group flush of everything the store has staged.
+
+        On a closed session, or with nothing staged, this is a cheap
+        no-op — zero round trips, no stats noise (the empty-multiput
+        convention).  In async mode it is a durability barrier
+        (``rs.barrier()``); in sync mode it flushes the delta store
+        mid-session (the staged-so-far versions become one group commit,
+        the rest of the session a second one)."""
+        if self._closed:
+            return
+        rs = self._rs
+        if self._async:
+            if rs._flusher is not None:
+                rs._flusher.drain()
+            return
+        if not rs.pending:
+            return
+        # bypass the open-writer guard for this deliberate mid-session
+        # flush; the guard exists to catch *implicit* splits of the
+        # session's group commit, not an explicit request
+        saved, rs._writer = rs._writer, None
+        try:
+            rs.flush()
+        finally:
+            rs._writer = saved
+
     def close(self) -> None:
-        """Group-flush the session (idempotent)."""
+        """Group-flush the session (idempotent).  Async sessions just
+        deregister — drains belong to the flusher's watermarks."""
         if self._closed:
             return
         self._closed = True
+        if self._async:
+            self._rs._async_writers.discard(self)
+            if self._rs._flusher is not None:
+                self._rs._flusher.tick()   # close is a clock event
+            return
         self._rs._writer = None
         if self._flush_on_close:
             self._rs.flush()
@@ -142,7 +185,7 @@ class WriteSession:
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
-        if exc_type is not None:
+        if exc_type is not None and not self._async:
             # abort: skip the flush, leave staged versions pending
             self._closed = True
             self._rs._writer = None
@@ -184,6 +227,10 @@ class RStore:
         # path below keeps postings coherent inside its own round trips
         self._indexes: Dict[str, SecondaryIndex] = {}
         self._writer: Optional[WriteSession] = None
+        # async ingest (core/flusher.py): when attached, any number of
+        # sessions may stage concurrently and the flusher owns durability
+        self._flusher = None
+        self._async_writers: set = set()
 
     # ------------------------------------------------------------- sessions
     def writer(self, flush_on_close: bool = True) -> WriteSession:
@@ -191,7 +238,16 @@ class RStore:
         ``flush_on_close=True`` the session group-flushes everything it
         staged on close; ``flush_on_close=False`` keeps the delta-store
         batching (flush only once ``batch_size`` versions accumulated) —
-        the facade wrappers use that to preserve the seed behaviour."""
+        the facade wrappers use that to preserve the seed behaviour.
+
+        With a :class:`~repro.core.flusher.BackgroundFlusher` attached,
+        sessions are concurrent: commits stage at zero round trips and
+        drain together on the flusher's watermarks (``flush_on_close``
+        is moot — close never flushes in async mode)."""
+        if self._flusher is not None:
+            ws = WriteSession(self, flush_on_close=False, async_mode=True)
+            self._async_writers.add(ws)
+            return ws
         if self._writer is not None and not self._writer._closed:
             raise RuntimeError(
                 "another WriteSession is already open on this store; close "
@@ -199,6 +255,44 @@ class RStore:
         ws = WriteSession(self, flush_on_close=flush_on_close)
         self._writer = ws
         return ws
+
+    # --------------------------------------------------------- async ingest
+    @property
+    def flusher(self):
+        """The attached :class:`~repro.core.flusher.BackgroundFlusher`,
+        or ``None`` (synchronous ingest)."""
+        return self._flusher
+
+    def attach_flusher(self, **flusher_kw):
+        """Switch to async ingest: attach a
+        :class:`~repro.core.flusher.BackgroundFlusher` (kwargs:
+        ``max_staged_versions`` / ``max_staged_bytes`` /
+        ``max_staged_age`` / ``retry``).  Versions already pending in the
+        delta store are adopted into the active buffer.  Raises if a
+        flusher is already attached or a sync WriteSession is open.
+        Detach with ``flusher.close()`` (drains first)."""
+        from .flusher import BackgroundFlusher
+        if self._flusher is not None:
+            raise RuntimeError("a BackgroundFlusher is already attached")
+        if self._writer is not None and not self._writer._closed:
+            raise RuntimeError(
+                "close the open WriteSession before attaching a "
+                "BackgroundFlusher (its group commit must not be split)")
+        self._flusher = BackgroundFlusher(self, **flusher_kw)
+        return self._flusher
+
+    def barrier(self):
+        """Durability barrier: everything committed before the call is
+        durable when it returns.  With a flusher attached this drains
+        both buffers (returns the :class:`~repro.core.flusher.DrainReport`);
+        without one it flushes the delta store.  With nothing staged it
+        is a cheap no-op — zero round trips, no stats noise."""
+        if self._flusher is not None:
+            return self._flusher.drain()
+        if self.pending:
+            self._check_no_open_writer("barrier()")
+            self.flush()
+        return None
 
     # ------------------------------------------------------------- ingest
     def _parent_key_arrays(self, vid: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -252,6 +346,8 @@ class RStore:
         self.graph.add_root(vid, rids)
         self._grow_r2c()
         self.pending.append(vid)
+        if self._flusher is not None:
+            self._flusher.on_stage(vid, int(sizes.sum()))
         return vid
 
     def _stage_commit(self, parents: Sequence[int], adds: Dict[int, bytes],
@@ -306,6 +402,8 @@ class RStore:
                                np.concatenate(del_rid_parts))
         self._grow_r2c()
         self.pending.append(vid)
+        if self._flusher is not None:
+            self._flusher.on_stage(vid, int(sizes.sum()))
         return vid
 
     # Back-compat wrappers: each is a one-commit write session that keeps
@@ -332,13 +430,19 @@ class RStore:
     def _check_no_open_writer(self, what: str) -> None:
         """Misuse is loud: chunking mid-session would split the open
         session's one group commit into several multiputs.  close() clears
-        the writer slot before its own flush, so session closes pass."""
+        the writer slot before its own flush, so session closes pass.
+        Async mode has no per-session group commit to protect — drains
+        batch across open sessions by design, so the guard is moot."""
+        if self._flusher is not None:
+            return
         if self._writer is not None and not self._writer._closed:
             raise RuntimeError(
                 f"{what} during an open WriteSession would split its group "
                 "commit; close the session instead")
 
     def _maybe_flush(self) -> None:
+        if self._flusher is not None:
+            return                    # watermarks own the drain schedule
         if self._writer is not None and not self._writer._closed:
             return                    # an open session group-flushes on close
         if len(self.pending) >= self.config.batch_size:
@@ -367,7 +471,12 @@ class RStore:
         """Chunk the pending batch (§4 online path; k=1 only — the paper's
         online algorithm does not cover re-grouping sub-chunks) and commit
         every new chunk + rebuilt map in ONE ``multiput`` (the group
-        commit: one backend write round trip per shard)."""
+        commit: one backend write round trip per shard).  With a
+        :class:`~repro.core.flusher.BackgroundFlusher` attached this is a
+        drain barrier instead (same durability, flusher bookkeeping)."""
+        if self._flusher is not None:
+            self._flusher.drain()
+            return
         self._check_no_open_writer("flush()")
         if not self.pending:
             return
@@ -377,6 +486,17 @@ class RStore:
             return
         batch = self.pending
         self.pending = []
+        writes = self._prepare_flush_writes(batch)
+        self.kvs.multiput(writes)
+        self._flushed_versions = self.graph.num_versions
+
+    def _prepare_flush_writes(self, batch: List[int]) -> List[Tuple[str, bytes]]:
+        """Online-chunk ``batch`` and stage its physical writes — new
+        chunks, rebuilt old chunk maps, extended index postings — WITHOUT
+        touching the backend.  All in-memory layout state (r2c, proj,
+        chunk bookkeeping) is advanced here; the caller owns the one
+        ``multiput`` that makes it durable (flush() immediately, the
+        BackgroundFlusher on its own drain schedule)."""
         placed = self.r2c >= 0
         part = partition_batch(self.graph, batch, placed,
                                self.config.algorithm, self.config.capacity,
@@ -425,12 +545,16 @@ class RStore:
                 iw, idel = idx.stage_writes()
                 writes.extend(iw)
                 assert not idel, "appending chunks never empties a bucket"
-        self.kvs.multiput(writes)
-        self._flushed_versions = self.graph.num_versions
+        return writes
 
     def build(self) -> Partitioning:
         """Full offline build (also the k>1 path)."""
         self._check_no_open_writer("build()")
+        if self._flusher is not None:
+            # drain barrier: staged work lands in the OLD layout first, so
+            # a replay from a failed drain can never cross the rebuild and
+            # resurrect superseded keys (a failed drain aborts the build)
+            self._flusher.drain()
         self._build_epoch += 1
         self.pending = []
         cfg = self.config
@@ -498,7 +622,11 @@ class RStore:
         reclaims them.  Returns the newly retired version ids.
         """
         self._check_no_open_writer("retain()")
-        if self.pending:
+        if self._flusher is not None:
+            # drain barrier — even with nothing pending a failed drain may
+            # hold prepared writes whose replay must land before retirement
+            self._flusher.drain()
+        elif self.pending:
             if self.config.auto_flush:
                 self.flush()
             else:
@@ -594,15 +722,42 @@ class RStore:
         return None if c is None else c.cache_report()
 
     # ------------------------------------------------------------- queries
-    def snapshot(self) -> Snapshot:
-        """Immutable read view of the flushed state (the session API).
+    def snapshot(self, mode: str = "fresh") -> Snapshot:
+        """Immutable read view of the store (the session API).
 
-        With ``auto_flush=True`` (seed behaviour) pending deltas are flushed
-        first; with ``auto_flush=False`` reads are strictly side-effect free
-        and unflushed deltas raise — call :meth:`flush` explicitly.
+        ``mode="fresh"`` (default) is read-your-writes: with a
+        :class:`~repro.core.flusher.BackgroundFlusher` attached it drains
+        first, so every committed version is visible.  Without a flusher,
+        ``auto_flush=True`` (seed behaviour) flushes pending deltas first
+        while ``auto_flush=False`` makes reads strictly side-effect free
+        (unflushed deltas raise — call :meth:`flush` explicitly).
+
+        ``mode="pinned"`` pins the last DURABLE state without flushing
+        anything: zero write round trips, bounded staleness.  Versions
+        still staged are invisible (querying one fails loudly) and the
+        snapshot's ``staleness_lag`` reports how many.  After a *failed*
+        drain the in-memory layout is ahead of the durable state, so a
+        pinned snapshot raises until a barrier (or backend recovery)
+        lands the replay.
         """
-        if self.pending:
-            if self._writer is not None and not self._writer._closed:
+        if mode not in ("fresh", "pinned"):
+            raise ValueError(f"unknown snapshot mode {mode!r} "
+                             "(expected 'fresh' or 'pinned')")
+        lag = 0
+        if self._flusher is not None:
+            if mode == "fresh":
+                self._flusher.drain()
+            else:
+                if self._flusher.has_unacked_writes:
+                    raise RuntimeError(
+                        "a failed drain left the in-memory layout ahead of "
+                        "the durable state; barrier() (or recover the "
+                        "backend) before taking a pinned snapshot")
+                lag = self._flusher.staleness_lag
+        elif self.pending:
+            if mode == "pinned":
+                lag = len(self.pending)
+            elif self._writer is not None and not self._writer._closed:
                 # flushing here would split the open session's one group
                 # commit into several multiputs behind the caller's back —
                 # misuse is loud, like every other mid-session hazard
@@ -610,7 +765,7 @@ class RStore:
                     f"{len(self.pending)} unflushed version(s) staged by an "
                     "open WriteSession; close the session (its group flush) "
                     "before reading")
-            if self.config.auto_flush:
+            elif self.config.auto_flush:
                 self.flush()
             else:
                 raise RuntimeError(
@@ -624,7 +779,8 @@ class RStore:
                         current_layout_epoch=lambda: self._layout_epoch,
                         indexes=self._indexes,
                         repin=lambda: (self.proj, self._indexes,
-                                       self._layout_epoch))
+                                       self._layout_epoch),
+                        staleness_lag=lag)
 
     def execute(self, queries) -> "BatchResult":
         """Run a batch of queries against a fresh snapshot (convenience)."""
@@ -673,4 +829,31 @@ class RStore:
         cache = self.cache_stats()
         if cache is not None:
             out["cache"] = cache
+        out["ingest"] = self._ingest_report()
+        return out
+
+    def _ingest_report(self) -> Dict[str, object]:
+        """The ``storage_stats()["ingest"]`` sub-report: staging state and
+        the flusher counters (which live on the top-of-stack ``KVSStats``
+        so they ride reset/snapshot/restore/merged like every counter)."""
+        fl = self._flusher
+        stats = self.kvs.stats
+        out: Dict[str, object] = {
+            "mode": "async" if fl is not None else "sync",
+            "staged_versions": (fl.staged_versions if fl is not None
+                                else len(self.pending)),
+            "staleness_lag": (fl.staleness_lag if fl is not None
+                              else len(self.pending)),
+            "n_flush_batches": stats.n_flush_batches,
+            "n_versions_staged": stats.n_versions_staged,
+            "max_observed_lag": stats.max_observed_lag,
+        }
+        if fl is not None:
+            out.update(
+                staged_bytes=fl.staged_bytes,
+                clock=fl.step,
+                open_sessions=len([w for w in self._async_writers
+                                   if not w._closed]),
+                pending_replay_writes=len(fl._replay),
+            )
         return out

@@ -68,6 +68,9 @@ class KVSStats:
     n_cache_hits: int = 0       # reads served by a CachingKVS layer
     n_cache_misses: int = 0     # reads a CachingKVS had to forward down
     bytes_served_from_cache: int = 0  # payload served at memory speed
+    n_flush_batches: int = 0    # BackgroundFlusher drains that committed
+    n_versions_staged: int = 0  # versions staged through async ingest
+    max_observed_lag: int = 0   # high-water committed-but-not-durable count
 
     def simulated_seconds(self, per_query_s: float = PER_QUERY_S,
                           bandwidth_Bps: float = BANDWIDTH_BPS) -> float:

@@ -166,6 +166,7 @@ class FaultInjectingKVS:
         self._rng = np.random.default_rng(self.seed)
         self._down = False
         self._consecutive = 0
+        self._forced: List[str] = []    # schedule_faults() queue, FIFO
         self.n_transient_injected = 0
         self.n_timeouts_injected = 0
         self.n_down_rejections = 0
@@ -187,10 +188,33 @@ class FaultInjectingKVS:
     def is_down(self) -> bool:
         return self._down
 
+    def schedule_faults(self, kinds: Sequence[str]) -> None:
+        """Deterministic fault queue for interleaving tests: the next
+        ``len(kinds)`` data ops consume these verbatim (``"transient"`` /
+        ``"timeout"`` / ``"ok"``) instead of drawing from the seeded
+        probability stream.  The ``max_consecutive_faults`` bound does
+        NOT apply to scheduled faults — an explicit schedule is the
+        test's own contract; pair it with a retry budget that covers it."""
+        kinds = list(kinds)
+        bad = set(kinds) - {"transient", "timeout", "ok"}
+        if bad:
+            raise ValueError(f"unknown fault kind(s) {sorted(bad)}; "
+                             "expected 'transient' | 'timeout' | 'ok'")
+        self._forced.extend(kinds)
+
     def _next_fault(self) -> Optional[str]:
         if self._down:
             self.n_down_rejections += 1
             raise ShardDown(f"shard killed (seed={self.seed})")
+        if self._forced:
+            kind = self._forced.pop(0)
+            if kind == "transient":
+                self.n_transient_injected += 1
+                return "transient"
+            if kind == "timeout":
+                self.n_timeouts_injected += 1
+                return "timeout"
+            return None
         if self.p_transient <= 0.0 and self.p_timeout <= 0.0:
             return None
         u = float(self._rng.random())

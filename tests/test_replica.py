@@ -27,7 +27,8 @@ def test_kvsstats_fields_drift_guard():
     that every declared field actually round-trips."""
     declared = tuple(f.name for f in dataclasses.fields(KVSStats))
     assert KVSStats._FIELDS == declared
-    for f in ("n_cache_hits", "n_cache_misses", "bytes_served_from_cache"):
+    for f in ("n_cache_hits", "n_cache_misses", "bytes_served_from_cache",
+              "n_flush_batches", "n_versions_staged", "max_observed_lag"):
         assert f in KVSStats._FIELDS
     s = KVSStats(**{name: i + 1 for i, name in enumerate(declared)})
     snap = s.snapshot()
@@ -147,6 +148,25 @@ def test_fault_injection_bounds_consecutive_faults():
             outcomes.append(False)
     # with p=1, the pattern is exactly fail, fail, forced success, ...
     assert outcomes == [False, False, True] * 3
+
+
+def test_schedule_faults_deterministic_queue():
+    """schedule_faults() consumes verbatim before the probability stream and
+    ignores the consecutive-fault bound — the interleaving harness's hook."""
+    f = FaultInjectingKVS(InMemoryKVS(), seed=4, max_consecutive_faults=1)
+    f.schedule_faults(["transient", "transient", "timeout", "ok"])
+    with pytest.raises(TransientBackendError):
+        f.multiput([("a", b"1")])
+    with pytest.raises(TransientBackendError):   # bound does not apply
+        f.multiput([("a", b"1")])
+    with pytest.raises(BackendTimeout):
+        f.multiput([("a", b"1")])
+    assert f.inner.get("a") == b"1"              # timeout applied first
+    f.multiput([("b", b"2")])                    # scheduled "ok"
+    f.multiput([("c", b"3")])                    # queue empty, p=0: clean
+    assert f.n_transient_injected == 2 and f.n_timeouts_injected == 1
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        f.schedule_faults(["bogus"])
 
 
 def test_timeout_write_is_applied_then_raises():
