@@ -3,18 +3,36 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
 writes JSON payloads under benchmarks/results/.  An aggregate
 ``BENCH_SUMMARY.json`` — per-bench headline metrics keyed by suite name,
-plus wall time and pass/fail status — lands at the repo root so a single
-file answers "what did the last bench run say".  The dry-run/roofline sweep
-(launch/dryrun.py) is separate — it needs the 512-device platform flag.
+plus wall time and pass/fail status, stamped with the git SHA, a UTC
+timestamp and a schema version so runs across PRs are directly diffable —
+lands at the repo root so a single file answers "what did the last bench
+run say".  The dry-run/roofline sweep (launch/dryrun.py) is separate — it
+needs the 512-device platform flag.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import pathlib
+import subprocess
 import sys
 import time
 
 SUMMARY_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_SUMMARY.json"
+
+# bump when the summary layout changes (suites moved under "suites",
+# metadata stamp added)
+SCHEMA_VERSION = 2
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=SUMMARY_PATH.parent, capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001 — not a repo / no git: still stamp
+        return "unknown"
 
 
 def _jsonable(obj):
@@ -38,7 +56,8 @@ def main() -> None:
                    bench_chunksize, bench_compaction, bench_fault_tolerance,
                    bench_fig8_span, bench_fig9_beta, bench_fig10_compression,
                    bench_fig11_query, bench_fig12_scaling, bench_fig13_online,
-                   bench_secondary, bench_table1, bench_write_path)
+                   bench_planner, bench_secondary, bench_table1,
+                   bench_write_path)
 
     suites = [
         ("table1_costmodel", bench_table1.run),
@@ -54,26 +73,36 @@ def main() -> None:
         ("fault_tolerance", bench_fault_tolerance.run),
         ("chunk_cache", bench_cache.run),
         ("secondary_index", bench_secondary.run),
+        ("query_planner", bench_planner.run),
         ("fig12_scaling", bench_fig12_scaling.run),
         ("fig13_online", bench_fig13_online.run),
     ]
     print("name,us_per_call,derived")
     failures = 0
-    summary = {}
+    suite_results = {}
     for name, fn in suites:
         t0 = time.time()
         try:
             headline = fn()
             wall = time.time() - t0
             print(f"suite/{name},{wall*1e6:.0f},ok")
-            summary[name] = {"status": "ok", "wall_s": round(wall, 3),
-                             "headline": _jsonable(headline)}
+            suite_results[name] = {"status": "ok", "wall_s": round(wall, 3),
+                                   "headline": _jsonable(headline)}
         except Exception as e:  # noqa: BLE001
             failures += 1
             wall = time.time() - t0
             print(f"suite/{name},0,FAILED:{type(e).__name__}:{e}")
-            summary[name] = {"status": f"FAILED:{type(e).__name__}:{e}",
-                             "wall_s": round(wall, 3), "headline": None}
+            suite_results[name] = {"status": f"FAILED:{type(e).__name__}:{e}",
+                                   "wall_s": round(wall, 3), "headline": None}
+    summary = {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "generated_at_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "n_suites": len(suites),
+        "n_failures": failures,
+        "suites": suite_results,
+    }
     SUMMARY_PATH.write_text(json.dumps(summary, indent=2) + "\n")
     print(f"# wrote {SUMMARY_PATH}")
     if failures:

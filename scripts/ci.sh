@@ -36,15 +36,20 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # round trip per shard, ≥3x lower simulated write seconds than per-session
 # synchronous flushes, and the same workload on replicated shards with one
 # replica of every group killed mid-drain staying byte-identical to a
-# synchronous-flush oracle with recover_all converging every replica) — so
-# a round-trip, availability, cache-coherence, index-selectivity, or
-# ingest-batching regression fails CI here instead of waiting for a full
-# benchmark run.
+# synchronous-flush oracle with recover_all converging every replica), and
+# the query-planner bench asserts the planner contract (a composite AND of
+# two selective predicates runs as ONE and_popcount-family kernel launch
+# plus ONE interleaved multiget, fetches fewer chunks than either predicate
+# alone, and is byte-identical to the client-side two-session intersection
+# it replaces; index-only Q.count/Q.distinct report 0 chunk-payload read
+# round trips) — so a round-trip, availability, cache-coherence,
+# index-selectivity, ingest-batching, or plan-quality regression fails CI
+# here instead of waiting for a full benchmark run.
 echo "== bench smoke (round-trip regression gate) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
 from benchmarks import (bench_async_ingest, bench_batched_query, bench_cache,
                         bench_compaction, bench_fault_tolerance,
-                        bench_secondary, bench_write_path)
+                        bench_planner, bench_secondary, bench_write_path)
 bench_write_path.run(smoke=True)
 bench_async_ingest.run(smoke=True)
 bench_batched_query.run(smoke=True)
@@ -52,5 +57,6 @@ bench_compaction.run(smoke=True)
 bench_fault_tolerance.run(smoke=True)
 bench_cache.run(smoke=True)
 bench_secondary.run(smoke=True)
+bench_planner.run(smoke=True)
 print("bench smoke OK")
 EOF

@@ -1,25 +1,25 @@
-"""Plan/execute query engine: batched multi-query sessions over snapshots.
+"""Snapshot sessions: the fetch layer of the unified query planner.
 
 RStore's core insight (§2.3–§2.4) is that few large batched fetches beat many
-small ones.  The seed API executed one query at a time, each paying two KVS
-round trips (chunks, then maps).  This module turns retrieval into a
-plan/execute pipeline over an immutable read view, in the spirit of the
-query/update separation of versioned external-memory dictionaries
-(Byde & Twigg):
+small ones, and that retrieval cost is governed by which chunks a plan
+touches.  The logical plan IR, the physical bitmap-program compiler, and the
+answer layer all live in :mod:`repro.core.plan`; this module owns the one
+thing that talks to the KVS — the session pipeline:
 
-1. **Plan** — every query's candidate chunk set is computed in one vectorized
-   pass over the projection bitmaps: index-AND queries (point/multi-point/
-   range) share a single pairwise ``and_popcount_batch`` kernel launch
-   (``Projections.candidates_batch``); version/evolution queries read their
-   posting lists directly.
+1. **Plan** — :class:`~repro.core.plan.Planner` compiles the whole batch:
+   every distinct leaf predicate contributes one bitmap row (shared across
+   queries), each predicate tree becomes AND/OR instructions, and the batch
+   executes ONE fused ``bitmap_vm_batch`` kernel launch.
 2. **Dedupe** — candidate chunk ids are unioned across the batch; a chunk
-   needed by ten queries is fetched once.
-3. **Fetch** — ONE combined ``multiget`` for chunks *and* chunk maps
-   (interleaved ``chunk/i``, ``map/i`` keys): a single backend round trip
-   for the whole session.
-4. **Extract** — per-query results are sliced out of the shared fetch; chunk
-   payload decodes and per-version chunk-map slices are cached and reused
-   across the queries that share them.
+   needed by ten queries is fetched once.  Index-only plans (``Q.count`` /
+   ``Q.exists`` / ``Q.distinct``) contribute their chunk *maps* only — their
+   payload blobs are never requested.
+3. **Fetch** — ONE combined ``multiget`` for payloads *and* chunk maps
+   (interleaved ``chunk/i``, ``map/i`` keys, then the map-only tail): a
+   single backend round trip for the whole session.
+4. **Answer** — :func:`repro.core.plan.answer` (the single per-kind switch)
+   materializes each result from the shared fetch, post-filtering exactly
+   per record; metadata-mode aggregates never touch the KVS at all.
 
 Usage::
 
@@ -27,16 +27,18 @@ Usage::
     results = snap.execute([
         Q.version(v3),
         Q.record(v3, pk=7),
-        Q.records(v3, [1, 2, 3]),
         Q.range(v3, 10, 19),
         Q.evolution(7),
         Q.where(v3, "color", 2),         # needs rs.create_index("color", ...)
-        Q.where_range(v3, "size", 10, 20),
+        Q.and_(Q.where(v3, "color", 2),  # composite: ONE kernel launch,
+               Q.where_range(v3, "size", 10, 20)),   # ONE multiget
+        Q.count(Q.where(v3, "color", 2)),    # index-only: zero payload fetch
+        Q.distinct(v3, "color"),             # index-only
     ])
     results[0].value                     # {pk: payload, ...}
     results[0].stats                     # per-query QueryStats
     results.batch                        # batch-level QueryStats
-                                         # (shared bytes attributed once)
+    print(snap.explain([Q.version(v3)])[0]["plan"])   # rendered plan tree
 
 Reads never mutate the store: ``Snapshot`` holds the flushed state and
 ``execute`` only touches the KVS.  ``RStore.get_*`` remain as thin wrappers
@@ -58,117 +60,23 @@ surfaces here, as :class:`repro.core.replica.BackendUnavailable`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
                     Tuple)
 
 import numpy as np
 
+from . import costmodel
+from . import plan as plan_mod
 from .chunkstore import ChunkMap, StoredChunk
 from .index import Projections
 from .kvs import Backend
+from .plan import (BatchResult, ExecContext, PlannedQuery, Q, Query,
+                   QueryResult, QueryStats, render_plan)
 from .secondary import SecondaryIndex
-from .types import unpack_ck
 from .version_graph import VersionGraph
 
-
-# ------------------------------------------------------------------- algebra
-@dataclass(frozen=True)
-class Query:
-    """One retrieval request.  Build via the :class:`Q` factory."""
-
-    kind: str          # version | record | records | range | evolution | where | where_range
-    vid: Optional[int] = None
-    pk: Optional[int] = None
-    pks: Optional[Tuple[int, ...]] = None
-    key_lo: Optional[int] = None         # pk bound (range) / value bound (where_range)
-    key_hi: Optional[int] = None
-    attr: Optional[str] = None           # secondary-index attribute (where*)
-    value: Optional[int] = None          # exact attribute value (where)
-
-
-class Q:
-    """Query constructors: the session API's algebra (§2.4 query classes)."""
-
-    @staticmethod
-    def version(vid: int) -> Query:
-        """Q1: every record live in version ``vid`` → Dict[pk, bytes]."""
-        return Query(kind="version", vid=int(vid))
-
-    @staticmethod
-    def record(vid: int, pk: int) -> Query:
-        """Point lookup of ``pk`` in ``vid`` → Optional[bytes]."""
-        return Query(kind="record", vid=int(vid), pk=int(pk))
-
-    @staticmethod
-    def records(vid: int, pks: Iterable[int]) -> Query:
-        """Multi-point lookup in ``vid`` → Dict[pk, bytes] (absent keys
-        omitted)."""
-        return Query(kind="records", vid=int(vid),
-                     pks=tuple(int(p) for p in pks))
-
-    @staticmethod
-    def range(vid: int, key_lo: int, key_hi: int) -> Query:
-        """Q2: records of ``vid`` with pk in [key_lo, key_hi] → Dict."""
-        return Query(kind="range", vid=int(vid), key_lo=int(key_lo),
-                     key_hi=int(key_hi))
-
-    @staticmethod
-    def evolution(pk: int) -> Query:
-        """Q3: every distinct record ever stored under ``pk`` →
-        List[(origin_vid, bytes)] in origin order."""
-        return Query(kind="evolution", pk=int(pk))
-
-    @staticmethod
-    def where(vid: int, attr: str, value: int) -> Query:
-        """Filtered scan: records of ``vid`` whose extracted ``attr`` equals
-        ``value`` → Dict[pk, bytes].  Needs a secondary index on ``attr``
-        (``rs.create_index``); results are exact — lossy chunk-granularity
-        postings are post-filtered against the fetched payloads."""
-        return Query(kind="where", vid=int(vid), attr=str(attr),
-                     value=int(value))
-
-    @staticmethod
-    def where_range(vid: int, attr: str, lo: int, hi: int) -> Query:
-        """Filtered scan: records of ``vid`` with extracted ``attr`` in
-        ``[lo, hi]`` → Dict[pk, bytes].  Same index + exactness contract as
-        :meth:`where`."""
-        return Query(kind="where_range", vid=int(vid), attr=str(attr),
-                     key_lo=int(lo), key_hi=int(hi))
-
-
-# -------------------------------------------------------------------- results
-@dataclass
-class QueryStats:
-    """Per-query (and, via :class:`BatchResult`, batch-level) fetch stats."""
-
-    chunks_fetched: int = 0
-    irrelevant_chunks: int = 0     # lossy-projection artifacts (§2.4)
-    bytes_fetched: int = 0
-    kvs_queries: int = 0           # backend round trips
-    records_returned: int = 0
-    cache_hits: int = 0            # batch-level: keys a CachingKVS served
-    bytes_from_cache: int = 0      # batch-level: payload served at memory speed
-
-
-@dataclass
-class QueryResult:
-    query: Query
-    value: Any                     # Dict / Optional[bytes] / List — by kind
-    stats: QueryStats
-
-
-class BatchResult(List[QueryResult]):
-    """``Snapshot.execute``'s return: a List[QueryResult] carrying the
-    batch-level stats.  ``batch.bytes_fetched`` counts every fetched chunk
-    once, no matter how many queries shared it; per-query stats attribute a
-    chunk to every query that planned it."""
-
-    batch: QueryStats
-
-    def __init__(self, results: Iterable[QueryResult], batch: QueryStats):
-        super().__init__(results)
-        self.batch = batch
+__all__ = ["Q", "Query", "QueryStats", "QueryResult", "BatchResult",
+           "Snapshot"]
 
 
 # ------------------------------------------------------------------- snapshot
@@ -196,6 +104,7 @@ class Snapshot:
                  indexes: Optional[Dict[str, SecondaryIndex]] = None,
                  repin: Optional[Callable[[], tuple]] = None,
                  staleness_lag: int = 0,
+                 chunk_bytes: int = 1 << 16,
                  ) -> None:
         self.graph = graph
         self.proj = proj
@@ -208,6 +117,8 @@ class Snapshot:
         # attr -> SecondaryIndex serving Q.where / Q.where_range plans
         self.indexes: Dict[str, SecondaryIndex] = indexes or {}
         self._vidx = {v: i for i, v in enumerate(graph.versions)}
+        # target chunk payload size (ingest config) — explain()'s byte model
+        self._chunk_bytes = int(chunk_bytes)
         # rebuild-epoch guard: a full build() repartitions and rewrites the
         # chunk/* and map/* keys, so chunk ids planned from this snapshot's
         # projections would dereference to unrelated data.  Online (k=1)
@@ -259,65 +170,48 @@ class Snapshot:
         return self
 
     # ---------------------------------------------------------------- plan
-    def plan(self, queries: Sequence[Query]) -> List[np.ndarray]:
-        """Candidate chunk ids per query — one vectorized pass.
+    def _planner(self) -> plan_mod.Planner:
+        # planners are batch-scoped: leaf-row dedupe and the instruction
+        # stream accumulate per plan_batch call
+        return plan_mod.Planner(self.graph, self.proj, self.indexes,
+                                self._vidx)
 
-        Version/evolution queries read their posting lists; all index-AND
-        queries — primary (record/records/range) and secondary
-        (where/where_range) alike — share a single pairwise bitmap-kernel
-        launch via ``Projections.and_version_batch``: each query's posting
-        lists OR into one bitmap row that is ANDed against its version's
-        bitmap row.
-        """
-        empty = np.empty(0, np.int64)
-        cands: List[Optional[np.ndarray]] = [None] * len(queries)
-        anding: List[Tuple[int, List[Optional[np.ndarray]]]] = []
-        anding_pos: List[int] = []
-        for i, q in enumerate(queries):
-            if q.vid is not None and self.graph.is_retired(q.vid):
-                raise KeyError(
-                    f"version {q.vid} was retired by a retention policy; "
-                    "its content is no longer queryable")
-            if q.kind == "version":
-                cands[i] = self.proj.chunks_for_version(q.vid)
-                continue
-            if q.kind == "evolution":
-                cands[i] = self.proj.chunks_for_key(q.pk)
-                continue
-            if q.kind in ("where", "where_range"):
-                idx = self.indexes.get(q.attr)
-                if idx is None:
-                    raise KeyError(
-                        f"no secondary index on attribute {q.attr!r}; "
-                        "register one with rs.create_index(attr, extractor)")
-                if q.kind == "where":
-                    postings = [idx.postings_for(q.value)]
-                else:
-                    postings = idx.postings_in_range(q.key_lo, q.key_hi)
-            elif q.kind in ("record", "records", "range"):
-                if q.kind == "record":
-                    pks = np.asarray([q.pk], dtype=np.int64)
-                elif q.kind == "records":
-                    pks = np.asarray(q.pks, dtype=np.int64)
-                else:
-                    pks = self.proj.keys_in_range(q.key_lo, q.key_hi)
-                postings = [self.proj.key_chunks.get(int(p)) for p in pks]
-            else:
-                raise ValueError(f"unknown query kind {q.kind!r}")
-            if not any(p is not None and len(p) for p in postings):
-                cands[i] = empty
-            else:
-                anding.append((q.vid, postings))
-                anding_pos.append(i)
-        if anding:
-            for pos, ids in zip(anding_pos,
-                                self.proj.and_version_batch(anding)):
-                cands[pos] = ids
-        return cands  # type: ignore[return-value]
+    def plan_batch(self, queries: Sequence[Query]) -> List[PlannedQuery]:
+        """Physical plans (mode + candidate chunks) for a batch — every
+        launch-needing query shares ONE fused bitmap-program launch."""
+        return self._planner().plan_batch(list(queries))
+
+    def plan(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        """Candidate chunk ids per query (the legacy entry point — now a
+        thin view over :meth:`plan_batch`)."""
+        return [pq.cand for pq in self.plan_batch(queries)]
 
     # ------------------------------------------------------------ prefetch
-    def _chunk_keys(self, chunk_ids: Iterable[int]) -> List[str]:
-        return [k for c in chunk_ids for k in (f"chunk/{c}", f"map/{c}")]
+    @staticmethod
+    def _fetch_keys(payload_ids: Iterable[int],
+                    map_only_ids: Iterable[int]) -> List[str]:
+        """The session's one multiget key list: interleaved payload+map keys
+        first (the legacy layout, byte-compatible with existing cache
+        admission), then the map-only tail for index-only plans."""
+        keys = [k for c in payload_ids for k in (f"chunk/{c}", f"map/{c}")]
+        keys.extend(f"map/{c}" for c in map_only_ids)
+        return keys
+
+    @staticmethod
+    def _split_ids(planned: Sequence[PlannedQuery]
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Dedupe candidates across the batch into (payload ids, map-only
+        ids): a chunk wanted by any fetch-mode plan gets its payload; one
+        wanted only by index-only plans gets its map alone."""
+        pay = [pq.cand for pq in planned if pq.needs_payload and len(pq.cand)]
+        maps = [pq.cand for pq in planned
+                if pq.mode == "index_only" and len(pq.cand)]
+        payload_ids = (np.unique(np.concatenate(pay)) if pay
+                       else np.empty(0, np.int64))
+        map_ids = (np.unique(np.concatenate(maps)) if maps
+                   else np.empty(0, np.int64))
+        map_only = np.setdiff1d(map_ids, payload_ids, assume_unique=True)
+        return payload_ids, map_only
 
     def prefetch(self, queries: Sequence[Query]) -> Dict[str, int]:
         """Warm the chunk cache with everything ``queries`` would fetch.
@@ -327,26 +221,25 @@ class Snapshot:
         read-through ``multiget`` — already-cached keys cost nothing, misses
         arrive in ONE round trip (per shard) and pass the admission rule —
         so a subsequent ``execute`` of the same queries takes 0 backend read
-        round trips.
+        round trips.  Index-only plans warm their chunk maps only.
         """
         self._check_fresh()
         if not getattr(self.kvs, "is_cache", False):
             return {"warmed_keys": 0, "round_trips": 0, "cache": 0}
-        cands = self.plan(list(queries))
-        nonempty = [c for c in cands if len(c)]
-        all_ids = (np.unique(np.concatenate(nonempty)) if nonempty
-                   else np.empty(0, np.int64))
-        return self._warm(self._chunk_keys(int(c) for c in all_ids))
+        payload_ids, map_only = self._split_ids(self.plan_batch(queries))
+        return self._warm(self._fetch_keys(
+            (int(c) for c in payload_ids), (int(c) for c in map_only)))
 
     def prefetch_evolution(self, pk: int, lineage_versions: int = 4
                            ) -> Dict[str, int]:
         """Warm the cache for ``Q.evolution(pk)`` by walking VersionGraph
         paths.
 
-        The base warm set is ``pk``'s key posting list — exactly the chunks
-        the evolution query plans, so it runs with 0 backend read round
-        trips afterwards.  On top, the version-tree paths root→leaf are
-        walked to recover the lineage of versions where ``pk`` actually
+        The base warm set is the evolution query's *planned* candidates
+        (pk's key posting list, minus retention-pruned dead chunks) —
+        exactly what the query fetches, so it runs with 0 backend read
+        round trips afterwards.  On top, the version-tree paths root→leaf
+        are walked to recover the lineage of versions where ``pk`` actually
         changed (its record copies name their origin versions), and the
         newest ``lineage_versions`` of those get their version posting
         lists warmed too — an evolution read is typically followed by
@@ -355,7 +248,8 @@ class Snapshot:
         self._check_fresh()
         if not getattr(self.kvs, "is_cache", False):
             return {"warmed_keys": 0, "round_trips": 0, "cache": 0}
-        cids = {int(c) for c in self.proj.chunks_for_key(pk)}
+        (pq,) = self.plan_batch([Q.evolution(pk)])
+        cids = {int(c) for c in pq.cand}
 
         # lineage walk: origins of pk's copies, ordered along tree paths
         store = self.graph.store
@@ -375,7 +269,7 @@ class Snapshot:
             vc = self.proj.version_chunks.get(v)
             if vc is not None:
                 cids.update(int(c) for c in vc)
-        return self._warm(self._chunk_keys(sorted(cids)))
+        return self._warm(self._fetch_keys(sorted(cids), ()))
 
     def _warm(self, keys: List[str]) -> Dict[str, int]:
         s = self.kvs.stats
@@ -389,39 +283,69 @@ class Snapshot:
 
     # ------------------------------------------------------------- execute
     def execute(self, queries: Sequence[Query]) -> BatchResult:
-        """Plan → dedupe → ONE interleaved multiget → extract."""
+        """Plan → dedupe → ONE interleaved multiget → answer."""
         self._check_fresh()
-        queries = list(queries)
-        cands = self.plan(queries)
+        planned = self.plan_batch(queries)
 
-        nonempty = [c for c in cands if len(c)]
-        all_ids = (np.unique(np.concatenate(nonempty)) if nonempty
-                   else np.empty(0, np.int64))
-
+        payload_ids, map_only = self._split_ids(planned)
         batch = QueryStats()
-        batch.chunks_fetched = len(all_ids)
-        fetched: Dict[int, Tuple[StoredChunk, ChunkMap, int]] = {}
-        if len(all_ids):
+        batch.chunks_fetched = len(payload_ids) + len(map_only)
+        batch.payload_chunks_fetched = len(payload_ids)
+        fetched: Dict[int, Tuple[Optional[StoredChunk], ChunkMap, int]] = {}
+        keys = self._fetch_keys((int(c) for c in payload_ids),
+                                (int(c) for c in map_only))
+        if keys:
             q0 = self.kvs.stats.n_queries
             b0 = self.kvs.stats.bytes_fetched
             h0 = self.kvs.stats.n_cache_hits
             c0 = self.kvs.stats.bytes_served_from_cache
-            # interleaved chunk/map keys: chunks + maps in ONE round trip.
+            # interleaved chunk/map keys: payloads + maps in ONE round trip.
             # Under a CachingKVS the hit/miss partition happens inside this
             # multiget — cached keys are served from memory and ONE inner
             # fetch covers the misses, so kvs_queries is 0 on a warm cache.
-            keys = [k for c in all_ids for k in (f"chunk/{c}", f"map/{c}")]
             blobs = self.kvs.multiget(keys)
             batch.kvs_queries = self.kvs.stats.n_queries - q0
             batch.bytes_fetched = self.kvs.stats.bytes_fetched - b0
             batch.cache_hits = self.kvs.stats.n_cache_hits - h0
             batch.bytes_from_cache = self.kvs.stats.bytes_served_from_cache - c0
-            for j, cid in enumerate(all_ids):
+            # payload round trips: the multiget carried chunk/* keys iff any
+            # fetch-mode plan had candidates — index-only/metadata batches
+            # report 0 here even though their maps cost a round trip
+            batch.payload_round_trips = (batch.kvs_queries
+                                         if len(payload_ids) else 0)
+            for j, cid in enumerate(payload_ids):
                 cb, mb = blobs[2 * j], blobs[2 * j + 1]
                 fetched[int(cid)] = (StoredChunk.from_bytes(cb),
                                      ChunkMap.from_bytes(mb),
                                      len(cb) + len(mb))
+            base = 2 * len(payload_ids)
+            for j, cid in enumerate(map_only):
+                mb = blobs[base + j]
+                fetched[int(cid)] = (None, ChunkMap.from_bytes(mb), len(mb))
 
+        ctx = self._exec_context(fetched)
+        results: List[QueryResult] = []
+        for pq in planned:
+            stats = QueryStats(
+                chunks_fetched=len(pq.cand),
+                bytes_fetched=sum(fetched[int(c)][2] for c in pq.cand),
+                kvs_queries=batch.kvs_queries if len(pq.cand) else 0,
+                payload_chunks_fetched=(len(pq.cand) if pq.needs_payload
+                                        else 0),
+                payload_round_trips=(batch.payload_round_trips
+                                     if pq.needs_payload and len(pq.cand)
+                                     else 0),
+            )
+            value = plan_mod.answer(pq, ctx, stats)
+            batch.records_returned += stats.records_returned
+            batch.irrelevant_chunks += stats.irrelevant_chunks
+            results.append(QueryResult(query=pq.query, value=value,
+                                       stats=stats))
+        return BatchResult(results, batch)
+
+    def _exec_context(self, fetched: Dict[int, Tuple[Optional[StoredChunk],
+                                                     ChunkMap, int]]
+                      ) -> ExecContext:
         # retention-aware evolution: with retired versions around, a kept
         # chunk may still hold record copies reachable from no retained
         # version; their chunk-map bitmap rows tell us (no retained bit set)
@@ -454,119 +378,42 @@ class Snapshot:
                 members[key] = fetched[cid][1].records_in_version(vidx)
             return members[key]
 
-        results: List[QueryResult] = []
-        for q, cand in zip(queries, cands):
-            stats = QueryStats(
-                chunks_fetched=len(cand),
-                bytes_fetched=sum(fetched[int(c)][2] for c in cand),
-                kvs_queries=batch.kvs_queries if len(cand) else 0,
-            )
-            value = self._extract(q, cand, fetched, _payloads, _members, stats)
-            batch.records_returned += stats.records_returned
-            batch.irrelevant_chunks += stats.irrelevant_chunks
-            results.append(QueryResult(query=q, value=value, stats=stats))
-        return BatchResult(results, batch)
+        return ExecContext(graph=self.graph, vidx=self._vidx,
+                           indexes=self.indexes, fetched=fetched,
+                           payloads=_payloads, members=_members,
+                           retained_bits=self._retained_bits)
 
-    # ------------------------------------------------------------- extract
-    def _extract(self, q: Query, cand: np.ndarray, fetched, _payloads,
-                 _members, stats: QueryStats):
-        if q.kind == "version":
-            out: Dict[int, bytes] = {}
-            vidx = self._vidx[q.vid]
-            for c in cand:
-                cid = int(c)
-                cmap = fetched[cid][1]
-                locs = _members(cid, vidx)
-                if len(locs) == 0:
-                    stats.irrelevant_chunks += 1
-                    continue
-                pay = _payloads(cid)
-                for li in locs:
-                    pk, _ = unpack_ck(int(cmap.cks[li]))
-                    out[pk] = pay[int(li)]
-            stats.records_returned = len(out)
-            return out
+    # ------------------------------------------------------------- explain
+    def explain(self, queries: Sequence[Query]) -> List[Dict[str, Any]]:
+        """Render each query's chosen plan with predicted costs.
 
-        if q.kind in ("record", "records", "range"):
-            vidx = self._vidx[q.vid]
-            out = {}
-            for c in cand:
-                cid = int(c)
-                cmap = fetched[cid][1]
-                locs = _members(cid, vidx)
-                keys = cmap.cks[locs] >> 32
-                if q.kind == "record":
-                    sel = locs[keys == q.pk]
-                elif q.kind == "records":
-                    sel = locs[np.isin(keys, np.asarray(q.pks, dtype=np.int64))]
-                else:
-                    sel = locs[(keys >= q.key_lo) & (keys <= q.key_hi)]
-                if len(sel) == 0:
-                    stats.irrelevant_chunks += 1
-                    continue
-                pay = _payloads(cid)
-                for li in sel:
-                    pk, _ = unpack_ck(int(cmap.cks[li]))
-                    out[pk] = pay[int(li)]
-            stats.records_returned = len(out)
-            if q.kind == "record":
-                return out.get(q.pk)
-            return out
-
-        if q.kind in ("where", "where_range"):
-            # exact post-filter: the lossy postings only say a chunk *may*
-            # hold a match (the record copies could be dead, live in other
-            # versions only, or share a chunk with the real match) — so the
-            # attribute is re-extracted from every record live in vid and
-            # the predicate applied exactly.  Lossiness never leaks.
-            idx = self.indexes[q.attr]
-            vidx = self._vidx[q.vid]
-            out = {}
-            for c in cand:
-                cid = int(c)
-                cmap = fetched[cid][1]
-                locs = _members(cid, vidx)
-                if len(locs) == 0:
-                    stats.irrelevant_chunks += 1
-                    continue
-                pay = _payloads(cid)
-                hit = False
-                for li in locs:
-                    p = pay[int(li)]
-                    v = idx.extractor(p).get(q.attr)
-                    if v is None:
-                        continue
-                    if (v == q.value if q.kind == "where"
-                            else q.key_lo <= v <= q.key_hi):
-                        pk, _ = unpack_ck(int(cmap.cks[li]))
-                        out[pk] = p
-                        hit = True
-                if not hit:
-                    stats.irrelevant_chunks += 1
-            stats.records_returned = len(out)
-            return out
-
-        if q.kind == "evolution":
-            evo: List[Tuple[int, bytes]] = []
-            retained_bits = getattr(self, "_retained_bits", None)
-            for c in cand:
-                cid = int(c)
-                cmap = fetched[cid][1]
-                sel = np.flatnonzero((cmap.cks >> 32) == q.pk)
-                if retained_bits is not None and len(sel):
-                    w = min(cmap.bitmap.shape[1], len(retained_bits))
-                    alive = (cmap.bitmap[sel, :w]
-                             & retained_bits[:w]).any(axis=1)
-                    sel = sel[alive]
-                if len(sel) == 0:
-                    stats.irrelevant_chunks += 1
-                    continue
-                pay = _payloads(cid)
-                for li in sel:
-                    _, origin = unpack_ck(int(cmap.cks[li]))
-                    evo.append((origin, pay[int(li)]))
-            evo.sort(key=lambda t: self._vidx.get(t[0], 1 << 30))
-            stats.records_returned = len(evo)
-            return evo
-
-        raise ValueError(f"unknown query kind {q.kind!r}")
+        Predictions come from :mod:`repro.core.costmodel` at the store's
+        configured chunk size: a fetch-mode plan pays payload+map per
+        candidate chunk, an index-only plan pays maps alone, a metadata
+        plan pays nothing.  Compare ``predicted_chunks`` against the
+        measured ``stats.chunks_fetched`` of an ``execute`` run to see how
+        lossy the projections were for the workload.
+        """
+        self._check_fresh()
+        out: List[Dict[str, Any]] = []
+        for pq in self.plan_batch(queries):
+            n = len(pq.cand)
+            # maps are tiny next to payloads: model them at 1/16 chunk size
+            map_b = max(self._chunk_bytes // 16, 1)
+            if pq.mode == "fetch":
+                n_keys, n_bytes = 2 * n, n * (self._chunk_bytes + map_b)
+            elif pq.mode == "index_only":
+                n_keys, n_bytes = n, n * map_b
+            else:  # metadata — answered from the version graph
+                n_keys = n_bytes = 0
+            rts = 1 if n_keys else 0
+            out.append({
+                "plan": render_plan(pq),
+                "mode": pq.mode,
+                "predicted_chunks": n,
+                "predicted_payload_chunks": n if pq.mode == "fetch" else 0,
+                "predicted_round_trips": rts,
+                "predicted_bytes": n_bytes,
+                "predicted_seconds": costmodel.fetch_seconds(rts, n_bytes),
+            })
+        return out

@@ -53,9 +53,21 @@ re-partition.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from . import costmodel
 from .replica import RetryPolicy
+
+# Adaptive watermark model (costmodel-derived defaults): a drain should be
+# big enough that its transfer time dominates the per-round-trip overhead by
+# this factor — bytes = _AMORTIZE_ROUND_TRIPS × PER_QUERY_S × BANDWIDTH_BPS.
+_AMORTIZE_ROUND_TRIPS = 16
+# Version watermark adapts to the observed average staged-version size
+# (byte watermark ÷ avg bytes), clamped so tiny versions can't stage
+# unboundedly and huge ones still batch a little.
+_MIN_ADAPTIVE_VERSIONS = 8
+_MAX_ADAPTIVE_VERSIONS = 8192
+_DEFAULT_ADAPTIVE_VERSIONS = 64     # before any version size is observed
 
 
 @dataclass
@@ -88,22 +100,41 @@ class BackgroundFlusher:
     lag between committed and durable state is therefore bounded by
     whichever watermark fires first — `staleness_lag` reports it live.
 
+    By default both watermarks are *adaptive*, derived from the cost model
+    instead of fixed constants: the byte watermark stages enough data that
+    one drain's transfer time amortizes its per-round-trip overhead
+    (``costmodel.PER_QUERY_S`` / ``BANDWIDTH_BPS``), and the version
+    watermark re-derives from the byte watermark at the observed average
+    staged-version size.  Passing an explicit value pins that watermark
+    and disables its adaptation.  ``watermarks()`` (surfaced in
+    ``storage_stats()["ingest"]``) reports the effective values.
+
     Online chunking is k=1 only (same restriction as ``flush()``), so
     attaching to a k>1 store raises."""
 
-    def __init__(self, rs, max_staged_versions: int = 64,
-                 max_staged_bytes: int = 1 << 22,
+    def __init__(self, rs, max_staged_versions: Optional[int] = None,
+                 max_staged_bytes: Optional[int] = None,
                  max_staged_age: Optional[int] = None,
                  retry: Optional[RetryPolicy] = None) -> None:
         if rs.config.k > 1:
             raise ValueError(
                 "BackgroundFlusher needs k == 1 — the online chunking path "
                 "cannot re-group sub-chunks (use build() for k > 1 stores)")
-        if max_staged_versions < 1:
+        if max_staged_versions is not None and max_staged_versions < 1:
             raise ValueError("max_staged_versions must be >= 1")
         self.rs = rs
-        self.max_staged_versions = int(max_staged_versions)
-        self.max_staged_bytes = int(max_staged_bytes)
+        self._adaptive_versions = max_staged_versions is None
+        self._adaptive_bytes = max_staged_bytes is None
+        self.max_staged_bytes = (
+            int(_AMORTIZE_ROUND_TRIPS * costmodel.PER_QUERY_S
+                * costmodel.BANDWIDTH_BPS)
+            if self._adaptive_bytes else int(max_staged_bytes))
+        self.max_staged_versions = (_DEFAULT_ADAPTIVE_VERSIONS
+                                    if self._adaptive_versions
+                                    else int(max_staged_versions))
+        # observed staged-version sizes, across drains (adaptation input)
+        self._obs_versions = 0
+        self._obs_bytes = 0
         self.max_staged_age = (None if max_staged_age is None
                                else int(max_staged_age))
         self.retry = retry or RetryPolicy()
@@ -147,6 +178,20 @@ class BackgroundFlusher:
         in-memory layout is ahead of the durable state."""
         return bool(self._replay)
 
+    def watermarks(self) -> Dict[str, object]:
+        """The effective drain thresholds and where they came from
+        (``storage_stats()["ingest"]["watermarks"]``)."""
+        return {
+            "max_staged_versions": self.max_staged_versions,
+            "max_staged_bytes": self.max_staged_bytes,
+            "max_staged_age": self.max_staged_age,
+            "adaptive_versions": self._adaptive_versions,
+            "adaptive_bytes": self._adaptive_bytes,
+            "observed_avg_version_bytes": (
+                int(self._obs_bytes / self._obs_versions)
+                if self._obs_versions else 0),
+        }
+
     def _check_open(self) -> None:
         if self._closed:
             raise RuntimeError(
@@ -160,6 +205,15 @@ class BackgroundFlusher:
         self.step += 1
         self._active.append((vid, int(nbytes), self.step))
         self._active_bytes += int(nbytes)
+        if nbytes > 0:
+            self._obs_versions += 1
+            self._obs_bytes += int(nbytes)
+            if self._adaptive_versions:
+                avg = self._obs_bytes / self._obs_versions
+                self.max_staged_versions = min(
+                    _MAX_ADAPTIVE_VERSIONS,
+                    max(_MIN_ADAPTIVE_VERSIONS,
+                        int(self.max_staged_bytes // max(avg, 1.0))))
         stats = self.rs.kvs.stats
         stats.n_versions_staged += 1
         if self.staleness_lag > stats.max_observed_lag:

@@ -780,7 +780,8 @@ class RStore:
                         indexes=self._indexes,
                         repin=lambda: (self.proj, self._indexes,
                                        self._layout_epoch),
-                        staleness_lag=lag)
+                        staleness_lag=lag,
+                        chunk_bytes=self.config.capacity)
 
     def execute(self, queries) -> "BatchResult":
         """Run a batch of queries against a fresh snapshot (convenience)."""
@@ -855,5 +856,6 @@ class RStore:
                 open_sessions=len([w for w in self._async_writers
                                    if not w._closed]),
                 pending_replay_writes=len(fl._replay),
+                watermarks=fl.watermarks(),
             )
         return out

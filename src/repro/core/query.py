@@ -1,12 +1,19 @@
 """Single-query compatibility layer over the plan/execute engine (§2.4).
 
-The four retrieval classes live in :mod:`repro.core.api` now: a
-:class:`~repro.core.api.Snapshot` plans a whole batch of queries in one
-vectorized projection pass and fetches every candidate chunk *and* chunk map
-in ONE interleaved ``multiget`` round trip.  :class:`QueryProcessor` is the
-seed API's shape — one query at a time — implemented as single-query batches
-on that engine, so each ``get_*`` costs exactly one KVS round trip (the seed
-paid two: chunks, then maps).
+.. deprecated::
+    ``QueryProcessor`` is the seed API's one-query-at-a-time shape, kept for
+    back-compat only.  New code should use the session API — ``rs.snapshot()``
+    + ``snap.execute([...])`` — which batches kernel launches and KVS round
+    trips across queries and supports the full planner algebra
+    (``Q.and_/or_/not_``, ``Q.count/exists/distinct``, ``snap.explain``).
+
+The query path lives in :mod:`repro.core.plan` (logical IR + planner +
+answer layer) and :mod:`repro.core.api` (the fetch layer): a
+:class:`~repro.core.api.Snapshot` compiles a whole batch into one fused
+bitmap-program launch and fetches every candidate chunk *and* chunk map in
+ONE interleaved ``multiget`` round trip.  :class:`QueryProcessor` is
+implemented as single-query batches on that engine, so each ``get_*`` costs
+exactly one KVS round trip (the seed paid two: chunks, then maps).
 """
 from __future__ import annotations
 

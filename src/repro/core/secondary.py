@@ -125,6 +125,12 @@ class SecondaryIndex:
         self.n_buckets = int(n_buckets)
         self.postings: Dict[int, np.ndarray] = {}     # value -> sorted cids
         self.chunk_values: Dict[int, np.ndarray] = {} # cid -> sorted values
+        # cid -> (values int64, present bool) aligned to the chunk's stored
+        # record order (row i of the chunk map).  This is what lets the
+        # planner's index-only aggregates and composite post-filters be
+        # *exact* without fetching the payload blob: the values were
+        # extracted from the same payloads at index-maintenance time.
+        self.chunk_record_values: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self._dirty: set = set()                      # bucket ids to persist
         self._stored: set = set()                     # bucket ids with a live key
         self._bucket_bytes: Dict[int, int] = {}       # persisted blob sizes
@@ -165,21 +171,37 @@ class SecondaryIndex:
         b = np.searchsorted(vs, int(hi), side="right")
         return [self.postings[int(v)] for v in vs[a:b]]
 
-    # ---------------------------------------------------------- maintenance
-    def _values_of(self, rids: np.ndarray,
-                   payload_of: Callable[[int], bytes]) -> np.ndarray:
-        vals = {v for r in rids
-                for a, v in self.extractor(payload_of(int(r))).items()
-                if a == self.attr}
-        return np.fromiter(sorted(vals), dtype=np.int64, count=len(vals))
+    # -------------------------------------------------- per-record values
+    def _record_values_of(self, rids: np.ndarray,
+                          payload_of: Callable[[int], bytes]
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Extract ``(values, present)`` per record, in ``rids`` order —
+        which is the chunk's stored order (row i of its chunk map)."""
+        vals = np.zeros(len(rids), dtype=np.int64)
+        present = np.zeros(len(rids), dtype=bool)
+        for i, r in enumerate(rids):
+            v = self.extractor(payload_of(int(r))).get(self.attr)
+            if v is not None:
+                vals[i] = int(v)
+                present[i] = True
+        return vals, present
 
+    def record_values(self, cid: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``(values int64, present bool)`` aligned to chunk ``cid``'s
+        stored record order — the exact per-record attribute values the
+        planner's answer layer filters with (no payload fetch needed)."""
+        return self.chunk_record_values[int(cid)]
+
+    # ---------------------------------------------------------- maintenance
     def add_chunks(self, chunks: Iterable[Tuple[int, np.ndarray]],
                    payload_of: Callable[[int], bytes]) -> None:
         """Extend postings for freshly written chunks (flush / compaction
         rewrite).  Append-only: never empties a bucket."""
         for cid, rids in chunks:
             cid = int(cid)
-            vals = self._values_of(rids, payload_of)
+            rvals, rpres = self._record_values_of(np.asarray(rids), payload_of)
+            self.chunk_record_values[cid] = (rvals, rpres)
+            vals = np.unique(rvals[rpres])
             if not len(vals):
                 self.chunk_values[cid] = vals
                 continue
@@ -199,6 +221,7 @@ class SecondaryIndex:
         map."""
         for cid in cids:
             cid = int(cid)
+            self.chunk_record_values.pop(cid, None)
             vals = self.chunk_values.pop(cid, None)
             if vals is None:
                 continue
@@ -222,6 +245,7 @@ class SecondaryIndex:
         previously = {self.bucket_of(v) for v in self.postings}
         self.postings = {}
         self.chunk_values = {}
+        self.chunk_record_values = {}
         self._values_dirty = True
         self.add_chunks(sorted(chunk_records.items()), payload_of)
         self._dirty |= previously | self._stored
@@ -291,7 +315,9 @@ class SecondaryIndex:
             idx._bucket_bytes[b] = len(blob)
         idx._values_dirty = True
         for cid, rids in chunk_records.items():
-            idx.chunk_values[int(cid)] = idx._values_of(rids, payload_of)
+            rvals, rpres = idx._record_values_of(np.asarray(rids), payload_of)
+            idx.chunk_record_values[int(cid)] = (rvals, rpres)
+            idx.chunk_values[int(cid)] = np.unique(rvals[rpres])
         return idx
 
     # ---------------------------------------------------------------- stats

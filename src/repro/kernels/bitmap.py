@@ -1,13 +1,26 @@
-"""Pallas TPU kernel: bitmap AND + popcount for index-ANDing (§2.4).
+"""Pallas TPU kernels: bitmap AND + popcount, and the bitmap VM (§2.4).
 
 Record/range retrieval intersects the two lossy projections (key→chunks and
 version→chunks).  With chunk membership as bitmaps (1 bit per chunk), the
-intersection is a bitwise AND and the candidate count a popcount.  The kernel
-ANDs a batch of key bitmaps (N, W) against either one shared version bitmap
-(1, W) held in VMEM across the whole grid (single-query index-ANDing) or a
-per-row batch of version bitmaps (N, W) tiled with the keys (the plan/execute
-engine's batched sessions: row i carries query i's version bitmap), emitting
-the AND tiles plus per-row popcounts.
+intersection is a bitwise AND and the candidate count a popcount.  The
+``and_popcount`` kernel ANDs a batch of key bitmaps (N, W) against either one
+shared version bitmap (1, W) held in VMEM across the whole grid (single-query
+index-ANDing) or a per-row batch of version bitmaps (N, W) tiled with the
+keys (the plan/execute engine's batched sessions: row i carries query i's
+version bitmap), emitting the AND tiles plus per-row popcounts.
+
+Composite predicates (``Q.and_``/``Q.or_``/``Q.not_`` trees planned by
+``core/plan.py``) need more than one pairwise AND, so ``bitmap_vm`` runs a
+small *bitmap program*: an (S, W) uint32 register file (leaf rows — OR'd
+posting lists and version bitmaps — followed by zeroed instruction outputs)
+and a (P, 4) int32 instruction stream ``(opcode, dst, lhs, rhs)`` with
+opcodes AND / OR / ANDNOT.  Instructions execute in order (``regs[dst] =
+op(regs[lhs], regs[rhs])``), so an arbitrary predicate tree over projection
+and secondary-index bitmaps evaluates in ONE fused launch; the final
+register file and per-row popcounts come back together.  An empty program
+passes the register file through unchanged.  The instruction stream lives in
+SMEM (scalar memory) — its fields drive dynamic row indexing into the VMEM
+register file.
 
 Popcount uses the SWAR bit-twiddle (no LUT: TPU VPU has no gather), entirely
 in uint32 lanes.
@@ -18,8 +31,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_N = 128
+
+# bitmap-VM opcodes (prog[:, 0])
+OP_AND = 0
+OP_OR = 1
+OP_ANDNOT = 2
 
 
 def _popcount32(v: jax.Array) -> jax.Array:
@@ -74,3 +93,67 @@ def and_popcount(bitmaps: jax.Array, row: jax.Array,
         interpret=interpret,
     )(bitmaps, row)
     return anded, counts[0]
+
+
+# ------------------------------------------------------------------ bitmap VM
+def _bitmap_vm_kernel(prog_ref, regs_ref, out_ref, cnt_ref):
+    # copy the register file, then execute the program in place: every
+    # instruction reads/writes whole (1, W) rows at dynamic (SMEM-sourced)
+    # sublane offsets
+    out_ref[...] = regs_ref[...]
+
+    def body(i, carry):
+        op = prog_ref[i, 0]
+        dst = prog_ref[i, 1]
+        lhs = prog_ref[i, 2]
+        rhs = prog_ref[i, 3]
+        a = pl.load(out_ref, (pl.ds(lhs, 1), slice(None)))
+        b = pl.load(out_ref, (pl.ds(rhs, 1), slice(None)))
+        r = jnp.where(op == OP_AND, a & b,
+                      jnp.where(op == OP_OR, a | b, a & ~b))
+        pl.store(out_ref, (pl.ds(dst, 1), slice(None)), r)
+        return carry
+
+    jax.lax.fori_loop(0, prog_ref.shape[0], body, 0)
+    cnt_ref[0, :] = jnp.sum(_popcount32(out_ref[...]).astype(jnp.int32), axis=1)
+
+
+def bitmap_vm(regs: jax.Array, prog: jax.Array,
+              *, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Execute a bitmap program over an (S, W) uint32 register file.
+
+    Args:
+      regs: (S, W) uint32 register file (leaf bitmaps + zeroed scratch rows).
+      prog: (P, 4) int32 instructions ``(opcode, dst, lhs, rhs)`` with
+        opcode in {OP_AND, OP_OR, OP_ANDNOT} and row operands in [0, S).
+        P == 0 is the empty program (register file passes through).
+    Returns:
+      (final registers (S, W) uint32, per-row popcounts (S,) int32).
+    """
+    S, W = regs.shape
+    P = prog.shape[0]
+    if prog.ndim != 2 or prog.shape[1] != 4:
+        raise ValueError(f"prog must be (P, 4) int32, got {prog.shape}")
+    if P == 0:
+        # nothing to execute — popcount-only; keeps the kernel's loop bounds
+        # static and the empty-program contract explicit
+        counts = jnp.sum(_popcount32(regs).astype(jnp.int32), axis=1)
+        return regs, counts
+    out, counts = pl.pallas_call(
+        _bitmap_vm_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((P, 4), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((S, W), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((S, W), lambda i: (0, 0)),
+            pl.BlockSpec((1, S), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, W), jnp.uint32),
+            jax.ShapeDtypeStruct((1, S), jnp.int32),
+        ],
+        interpret=interpret,
+    )(prog, regs)
+    return out, counts[0]

@@ -151,6 +151,12 @@ def xor_delta_bytes(parent: bytes, child: bytes,
 
 
 # ------------------------------------------------------------------- bitmap
+# Fused bitmap-plan launches since import ("and_popcount family": the
+# pairwise AND kernel and the bitmap VM).  The planner's one-launch-per-batch
+# contract is asserted against deltas of this counter.
+BITMAP_LAUNCHES = 0
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _and_jit(bms, row, interpret=INTERPRET):
     return _bitmap.and_popcount(bms, row, interpret=interpret)
@@ -164,6 +170,8 @@ def and_popcount_batch(bitmaps: np.ndarray, row: np.ndarray,
     bitmap — the single-query index-AND) or a pairwise (N, W) batch (row i
     ANDs bitmaps[i] — one kernel launch plans a whole query session).
     """
+    global BITMAP_LAUNCHES
+    BITMAP_LAUNCHES += 1
     N, W = bitmaps.shape
     row = np.asarray(row)
     if row.ndim == 1:
@@ -189,3 +197,47 @@ def and_popcount_batch(bitmaps: np.ndarray, row: np.ndarray,
 def _and_ref_jit(bms, row):
     from . import ref
     return ref.and_popcount_ref(bms, row)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _vm_jit(regs, prog, interpret=INTERPRET):
+    return _bitmap.bitmap_vm(regs, prog, interpret=interpret)
+
+
+@jax.jit
+def _vm_ref_jit(regs, prog):
+    from . import ref
+    return ref.bitmap_vm_ref(regs, prog)
+
+
+def bitmap_vm_batch(regs: np.ndarray, prog: np.ndarray,
+                    *, interpret: bool = INTERPRET) -> Tuple[np.ndarray, np.ndarray]:
+    """Run one bitmap program over an (S, W) uint32 register file.
+
+    ``prog`` is (P, 4) int32 ``(opcode, dst, lhs, rhs)`` rows (opcodes
+    ``bitmap.OP_AND`` / ``OP_OR`` / ``OP_ANDNOT``); an empty program is
+    legal and passes the registers through.  Pads S and W to the lane
+    boundary and P to a multiple of 8 with OR-identity no-ops (``regs[0] =
+    regs[0] | regs[0]``) to bound jit recompiles, then returns the final
+    registers ``(S, W)`` and per-row popcounts ``(S,)`` unpadded.  One call
+    = one fused launch, whatever the predicate-tree shape.
+    """
+    global BITMAP_LAUNCHES
+    BITMAP_LAUNCHES += 1
+    S, W = regs.shape
+    prog = np.asarray(prog, dtype=np.int32).reshape(-1, 4)
+    if len(prog) and (prog[:, 1:].min() < 0 or prog[:, 1:].max() >= S):
+        raise ValueError(f"program row operand out of range [0, {S})")
+    Sp = _pad_to(max(S, 1), _P_LANE)   # popcount output lane dim
+    Wp = _pad_to(max(W, 1), _P_LANE)
+    Pp = _pad_to(max(len(prog), 1), 8)
+    rb = np.zeros((Sp, Wp), dtype=np.uint32)
+    rb[:S, :W] = regs
+    pg = np.zeros((Pp, 4), dtype=np.int32)
+    pg[:, 0] = _bitmap.OP_OR           # no-op padding: regs[0] |= regs[0]
+    pg[:len(prog)] = prog
+    if interpret:
+        out, cnt = _vm_ref_jit(jnp.asarray(rb), jnp.asarray(pg))
+    else:
+        out, cnt = _vm_jit(jnp.asarray(rb), jnp.asarray(pg), interpret=False)
+    return np.asarray(out)[:S, :W], np.asarray(cnt)[:S]

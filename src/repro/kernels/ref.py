@@ -40,3 +40,20 @@ def and_popcount_ref(bitmaps: jax.Array, row: jax.Array) -> tuple[jax.Array, jax
     anded = bitmaps & row
     counts = jnp.sum(popcount32_ref(anded).astype(jnp.int32), axis=1)
     return anded, counts
+
+
+def bitmap_vm_ref(regs: jax.Array, prog: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(S, W) uint32 registers, (P, 4) int32 ``(op, dst, lhs, rhs)`` stream
+    with op in {0: AND, 1: OR, 2: ANDNOT} → (final registers, per-row
+    popcounts).  P == 0 passes the register file through unchanged."""
+
+    def body(i, r):
+        op = prog[i, 0]
+        a = jax.lax.dynamic_index_in_dim(r, prog[i, 2], axis=0, keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(r, prog[i, 3], axis=0, keepdims=False)
+        val = jnp.where(op == 0, a & b, jnp.where(op == 1, a | b, a & ~b))
+        return jax.lax.dynamic_update_index_in_dim(r, val, prog[i, 1], axis=0)
+
+    out = jax.lax.fori_loop(0, prog.shape[0], body, regs)
+    counts = jnp.sum(popcount32_ref(out).astype(jnp.int32), axis=1)
+    return out, counts

@@ -1,5 +1,12 @@
-"""Batched serving engine: prefill + jitted greedy decode loop.
+"""Serving engines: the store's query front-end and the LLM decode loop.
 
+:class:`StoreQueryEngine` is the RStore serving surface: it pins a snapshot
+per wave of queries and routes every wave through the unified planner
+(:mod:`repro.core.plan` via ``Snapshot.execute`` — the same one-launch /
+one-multiget pipeline the session API uses), transparently re-pinning when
+a compaction pass re-partitions chunk storage under it.
+
+:class:`Engine` is the batched LLM engine: prefill + jitted greedy decode.
 The decode loop runs as a single jitted ``lax.scan`` over steps (one dispatch
 per generation call, not per token), with caches donated between steps — the
 pattern a production server uses per wave of a continuous-batching scheduler.
@@ -7,13 +14,63 @@ pattern a production server uses per wave of a continuous-batching scheduler.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..models.config import ModelConfig
 from ..models.model import Model, build_model
+
+
+class StoreQueryEngine:
+    """Store-serving front-end: waves of queries over pinned snapshots.
+
+    Holds one snapshot at a time and executes whole waves against it —
+    planning, kernel launches and the KVS multiget are batched per wave by
+    the planner, not per query.  A full ``build()`` under the engine
+    invalidates the pin and the next wave re-snapshots; a compaction pass
+    just re-pins via ``snapshot.refresh()``.
+    """
+
+    def __init__(self, rs) -> None:
+        self.rs = rs
+        self._snap = None
+        self.waves_served = 0
+        self.repins = 0
+
+    def snapshot(self):
+        """The current pinned snapshot (taken lazily, kept across waves)."""
+        if self._snap is None:
+            self._snap = self.rs.snapshot()
+        return self._snap
+
+    def _fresh_snapshot(self):
+        snap = self.snapshot()
+        try:
+            snap._check_fresh()
+        except RuntimeError:
+            try:
+                snap = snap.refresh()          # compaction: re-pin in place
+            except RuntimeError:
+                snap = self.rs.snapshot()      # full rebuild: new snapshot
+            self._snap = snap
+            self.repins += 1
+        return snap
+
+    def serve(self, queries: Sequence[Any]):
+        """Execute one wave → :class:`~repro.core.plan.BatchResult`."""
+        batch = self._fresh_snapshot().execute(list(queries))
+        self.waves_served += 1
+        return batch
+
+    def explain(self, queries: Sequence[Any]) -> List[Dict[str, Any]]:
+        """Rendered plans + predicted costs for a wave (no execution)."""
+        return self._fresh_snapshot().explain(list(queries))
+
+    def warm(self, queries: Sequence[Any]) -> Dict[str, int]:
+        """Prefetch a wave's chunks into the cache layer, if one is on."""
+        return self._fresh_snapshot().prefetch(list(queries))
 
 
 class Engine:

@@ -112,3 +112,94 @@ def test_bitmap_popcount_exact(n, w, seed):
     want = np.array([sum(bin(int(x)).count("1") for x in r) for r in bms & row])
     np.testing.assert_array_equal(anded, bms & row)
     np.testing.assert_array_equal(cnt, want)
+
+
+# ---------------------------------------------------------------- bitmap VM
+def _vm_oracle(regs: np.ndarray, prog: np.ndarray):
+    """Plain-python simulation of the bitmap VM (independent of ref.py)."""
+    r = regs.copy()
+    for op, dst, lhs, rhs in np.asarray(prog, dtype=np.int64).reshape(-1, 4):
+        a, b = r[lhs], r[rhs]
+        r[dst] = (a & b if op == kbitmap.OP_AND
+                  else a | b if op == kbitmap.OP_OR else a & ~b)
+    cnt = np.array([sum(bin(int(x)).count("1") for x in row) for row in r])
+    return r, cnt
+
+
+def _random_prog(rng, S: int, P: int) -> np.ndarray:
+    prog = np.empty((P, 4), dtype=np.int32)
+    prog[:, 0] = rng.integers(0, 3, size=P)
+    prog[:, 1:] = rng.integers(0, S, size=(P, 3))
+    return prog
+
+
+@pytest.mark.parametrize("S,W,P", [(128, 128, 8), (128, 256, 32), (256, 128, 1)])
+def test_bitmap_vm_kernel_matches_ref(S, W, P):
+    rng = np.random.default_rng(S * 13 + W + P)
+    regs = rng.integers(0, 2**32, size=(S, W), dtype=np.uint32)
+    prog = _random_prog(rng, S, P)
+    o1, c1 = kbitmap.bitmap_vm(jnp.asarray(regs), jnp.asarray(prog),
+                               interpret=True)
+    o2, c2 = ref.bitmap_vm_ref(jnp.asarray(regs), jnp.asarray(prog))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("op", [kbitmap.OP_AND, kbitmap.OP_OR, kbitmap.OP_ANDNOT])
+def test_bitmap_vm_each_op_exact(op):
+    rng = np.random.default_rng(40 + op)
+    regs = rng.integers(0, 2**32, size=(4, 9), dtype=np.uint32)
+    prog = np.array([[op, 3, 0, 1]], dtype=np.int32)
+    out, cnt = ops.bitmap_vm_batch(regs, prog)
+    want, wcnt = _vm_oracle(regs, prog)
+    np.testing.assert_array_equal(out, want)
+    np.testing.assert_array_equal(cnt, wcnt)
+
+
+def test_bitmap_vm_empty_program_passes_through():
+    rng = np.random.default_rng(3)
+    regs = rng.integers(0, 2**32, size=(5, 7), dtype=np.uint32)
+    out, cnt = ops.bitmap_vm_batch(regs, np.zeros((0, 4), dtype=np.int32))
+    np.testing.assert_array_equal(out, regs)
+    want = np.array([sum(bin(int(x)).count("1") for x in r) for r in regs])
+    np.testing.assert_array_equal(cnt, want)
+    # kernel-level empty program too (the P == 0 short-circuit)
+    o, c = kbitmap.bitmap_vm(jnp.asarray(regs), jnp.zeros((0, 4), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(o), regs)
+    np.testing.assert_array_equal(np.asarray(c), want)
+
+
+def test_bitmap_vm_all_zero_bitmaps():
+    regs = np.zeros((6, 11), dtype=np.uint32)
+    prog = np.array([[kbitmap.OP_OR, 4, 0, 1],
+                     [kbitmap.OP_ANDNOT, 5, 2, 3]], dtype=np.int32)
+    out, cnt = ops.bitmap_vm_batch(regs, prog)
+    assert (out == 0).all() and (cnt == 0).all()
+
+
+@given(st.integers(2, 24), st.integers(1, 17), st.integers(0, 12),
+       st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_bitmap_vm_property_matches_oracle(s, w, p, seed):
+    rng = np.random.default_rng(seed)
+    regs = rng.integers(0, 2**32, size=(s, w), dtype=np.uint32)
+    prog = _random_prog(rng, s, p)
+    out, cnt = ops.bitmap_vm_batch(regs, prog)
+    want, wcnt = _vm_oracle(regs, prog)
+    np.testing.assert_array_equal(out, want)
+    np.testing.assert_array_equal(cnt, wcnt)
+
+
+def test_bitmap_vm_operand_out_of_range_raises():
+    regs = np.zeros((4, 4), dtype=np.uint32)
+    with pytest.raises(ValueError, match="out of range"):
+        ops.bitmap_vm_batch(regs, np.array([[0, 4, 0, 1]], dtype=np.int32))
+    with pytest.raises(ValueError, match="out of range"):
+        ops.bitmap_vm_batch(regs, np.array([[0, 0, -1, 1]], dtype=np.int32))
+
+
+def test_bitmap_vm_counts_one_launch():
+    regs = np.ones((3, 3), dtype=np.uint32)
+    before = ops.BITMAP_LAUNCHES
+    ops.bitmap_vm_batch(regs, np.zeros((0, 4), dtype=np.int32))
+    assert ops.BITMAP_LAUNCHES - before == 1

@@ -834,3 +834,148 @@ _ASYNC_EXAMPLES = [
                               "compact-during-stage"])
 def test_async_ingest_fixed_examples(plan):
     _check_async_interleaving(plan)
+
+
+# ------------------------------------------ composite planner coherence
+def _attr2_extractor(payload: bytes) -> dict:
+    # two low-cardinality attrs so composite predicates stay non-vacuous
+    # across random payloads
+    return {"tag": payload[0] % 4, "hue": payload[1] % 3}
+
+
+def _composite_probes(full):
+    """Brute-force full-scan answers for the composite probe battery."""
+    def f(pred):
+        return {pk: p for pk, p in full.items() if pred(_attr2_extractor(p))}
+
+    return [
+        f(lambda a: a["tag"] == 1 and a["hue"] == 2),            # and_
+        f(lambda a: a["tag"] == 0 or a["tag"] == 3),             # or_
+        f(lambda a: a["tag"] != 2),                              # not_
+        f(lambda a: a["hue"] <= 1 and a["tag"] != 0),            # nested
+        sum(1 for p in full.values()
+            if _attr2_extractor(p)["tag"] == 1),                 # count
+        sorted({_attr2_extractor(p)["hue"] for p in full.values()}),
+    ]
+
+
+def _check_composite_planner_coherent(w, fp):
+    """Body of test_composite_plans_byte_identical_under_interleavings,
+    callable with concrete (workload, fault-plan) dicts — also exercised by
+    test_composite_planner_fixed_examples when hypothesis is absent."""
+    cfg = dict(algorithm=w["algorithm"], capacity=w["capacity"], k=w["k"],
+               batch_size=w["batch"])
+    R, n_shards = fp["R"], fp["n_shards"]
+
+    # oracle: plain in-memory, UNINDEXED store — every composite answer is
+    # checked against a brute-force full-version scan + exact filter
+    probes0 = []
+    rs0 = RStore(RStoreConfig(**cfg), kvs=InMemoryKVS())
+
+    def probe0(vids):
+        full, _ = rs0.get_version(vids[-1])
+        probes0.append(_composite_probes(full))
+
+    vids0 = _run_steps(rs0, np.random.default_rng(w["seed"]), w["steps"],
+                       lambda i: None, probe=probe0)
+
+    # subject: doubly-indexed store over a replicated (optionally sharded,
+    # optionally faulty/killed) backend, same interleaving — answered
+    # through planned composite trees and index-only aggregates
+    groups = [ReplicatedKVS(
+        [FaultInjectingKVS(InMemoryKVS(), seed=fp["seed"] + i * R + r,
+                           p_transient=fp["p_transient"],
+                           p_timeout=fp["p_timeout"])
+         for r in range(R)], write_quorum=1) for i in range(n_shards)]
+    kvs1 = groups[0] if n_shards == 1 else ShardedKVS(groups)
+    rs1 = RStore(RStoreConfig(**cfg), kvs=kvs1)
+    rs1.create_index("tag", _attr2_extractor, n_buckets=3)
+    rs1.create_index("hue", _attr2_extractor, n_buckets=3)
+    kill_at = fp["kill_step"] % len(w["steps"]) if fp["kill"] else None
+    probes1 = []
+
+    def on_step(i):
+        if i == kill_at:
+            for g in groups:
+                g.replicas[0].kill()
+
+    def probe1(vids):
+        v = vids[-1]
+        res = rs1.snapshot().execute([
+            Q.and_(Q.where(v, "tag", 1), Q.where(v, "hue", 2)),
+            Q.or_(Q.where(v, "tag", 0), Q.where(v, "tag", 3)),
+            Q.and_(Q.version(v), Q.not_(Q.where(v, "tag", 2))),
+            Q.and_(Q.where_range(v, "hue", 0, 1),
+                   Q.not_(Q.where(v, "tag", 0))),
+            Q.count(Q.where(v, "tag", 1)),
+            Q.distinct(v, "hue"),
+        ])
+        # the aggregates answered index-only: zero chunk-payload traffic
+        assert res[4].stats.payload_round_trips == 0
+        assert res[5].stats.payload_round_trips == 0
+        probes1.append([r.value for r in res])
+
+    vids1 = _run_steps(rs1, np.random.default_rng(w["seed"]), w["steps"],
+                       on_step, probe=probe1)
+
+    # identical interleaving → identical version ids, and every mid-run
+    # composite plan was byte-identical to the brute-force oracle
+    assert vids1 == vids0
+    assert probes1 == probes0
+
+    # retired versions are refused at PLAN time, live ones still answer
+    retired = [vid for vid in range(rs1.graph.num_versions)
+               if rs1.graph.is_retired(vid)]
+    snap = rs1.snapshot()
+    if retired:
+        dead = retired[0]
+        with pytest.raises(KeyError, match="retired"):
+            snap.plan_batch([Q.and_(Q.where(dead, "tag", 1),
+                                    Q.where(dead, "hue", 2))])
+    full, _ = rs0.get_version(vids0[-1])
+    got = snap.execute([Q.and_(Q.version(vids0[-1]),
+                               Q.not_(Q.where(vids0[-1], "tag", 2)))])
+    assert got[0].value == {pk: p for pk, p in full.items()
+                            if _attr2_extractor(p)["tag"] != 2}
+
+
+@given(maintenance_workload(), fault_plan())
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_composite_plans_byte_identical_under_interleavings(w, fp):
+    """For ANY interleaving of commit waves, retention prunings, compaction
+    passes, and replica kills on a replicated flaky backend, every planned
+    composite tree (and_/or_/not_ over where/where_range/version) is
+    byte-identical to a brute-force full-scan oracle — mid-run after every
+    step and at the end — aggregates answer index-only with zero
+    chunk-payload round trips, and retired versions are refused at plan
+    time."""
+    _check_composite_planner_coherent(w, fp)
+
+
+# fixed corner examples so the contract is still exercised when hypothesis
+# is unavailable (conftest shims @given into a skip)
+_COMPOSITE_EXAMPLES = [
+    # retention retires versions mid-run (plan-time refusal has real
+    # retired vids to refuse) + transient faults on a replicated shard
+    ({"algorithm": "bottom_up", "k": 1, "batch": 3, "capacity": 512,
+      "n_shards": 0, "seed": 131,
+      "steps": [("commits", 4), ("retain", 2), ("commits", 3),
+                ("compact", 0.6), ("commits", 2)]},
+     {"R": 2, "n_shards": 1, "p_transient": 0.15, "p_timeout": 0.0,
+      "kill": False, "kill_step": 0, "seed": 137}),
+    # k>1 rebuild path + replica kill mid-run on a sharded router with
+    # timeouts: composite plans must survive failover reads
+    ({"algorithm": "shingle", "k": 3, "batch": 2, "capacity": 2048,
+      "n_shards": 0, "seed": 139,
+      "steps": [("commits", 5), ("compact", 1.0), ("retain", 4),
+                ("commits", 2)]},
+     {"R": 3, "n_shards": 3, "p_transient": 0.0, "p_timeout": 0.15,
+      "kill": True, "kill_step": 2, "seed": 149}),
+]
+
+
+@pytest.mark.parametrize("w,fp", _COMPOSITE_EXAMPLES,
+                         ids=["retain-refusal", "k3-kill-failover"])
+def test_composite_planner_fixed_examples(w, fp):
+    _check_composite_planner_coherent(w, fp)
